@@ -1,0 +1,79 @@
+"""Paper Table 1: F1 of federated AdaBoost.F vs the centralized AdaBoost
+oracle (the 'Reference' role) on the ten dataset analogues, plus the
+single-weak-learner floor.  The paper's claim — federated matches the
+reference implementation — maps to |F1_fed - F1_central| being small and
+both well above one weak learner.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Reporter
+from repro.core import boosting
+from repro.core.metrics import f1_macro
+from repro.core.plan import adaboost_plan
+from repro.data import PAPER_DATASETS, get_dataset
+from repro.fl.federation import Federation
+from repro.fl.partition import iid_partition
+from repro.learners import LearnerSpec, get_learner
+
+# Rounds per dataset (paper used 300; CPU budget caps the big ones — the
+# fed-vs-central comparison is at MATCHED rounds so the claim is intact).
+ROUNDS = {
+    "adult": 20, "forestcover": 10, "kr-vs-kp": 30, "splice": 30, "vehicle": 30,
+    "segmentation": 30, "sat": 20, "pendigits": 20, "vowel": 30, "letter": 10,
+}
+N_COLLABORATORS = 9  # paper: 1 aggregator + 9 collaborators
+
+
+def run_dataset(name: str, rep: Reporter, seeds=(0, 1, 2)) -> None:
+    learner = get_learner("decision_tree")
+    fed_f1s, cen_f1s, weak_f1s = [], [], []
+    for seed in seeds:
+        key = jax.random.PRNGKey(seed)
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        dspec, (Xtr, ytr, Xte, yte) = get_dataset(name, k1)
+        lspec = LearnerSpec("decision_tree", dspec.n_features, dspec.n_classes,
+                            {"depth": 4, "n_bins": 16})
+        T = ROUNDS[name]
+        Xs, ys, masks = iid_partition(Xtr, ytr, N_COLLABORATORS, k2)
+        fed = Federation(adaboost_plan(rounds=T), Xs, ys, masks, Xte, yte, lspec, k3)
+        hist = fed.run(eval_every=T)
+        fed_f1s.append(hist[-1]["f1"])
+
+        ens = boosting.centralized_adaboost(learner, lspec, Xtr, ytr, T, k4)
+        pred = boosting.strong_predict(learner, lspec, ens, Xte)
+        cen_f1s.append(float(f1_macro(yte, pred, dspec.n_classes)))
+
+        w = jnp.ones(ytr.shape, jnp.float32)
+        single = learner.fit(lspec, None, Xtr, ytr, w, k4)
+        pred1 = learner.predict(lspec, single, Xte)
+        weak_f1s.append(float(f1_macro(yte, pred1, dspec.n_classes)))
+
+    import numpy as np
+
+    rep.add(
+        name,
+        rounds=ROUNDS[name],
+        fed_f1=round(float(np.mean(fed_f1s)), 4),
+        fed_std=round(float(np.std(fed_f1s)), 4),
+        central_f1=round(float(np.mean(cen_f1s)), 4),
+        central_std=round(float(np.std(cen_f1s)), 4),
+        single_weak_f1=round(float(np.mean(weak_f1s)), 4),
+        gap=round(float(np.mean(fed_f1s) - np.mean(cen_f1s)), 4),
+    )
+
+
+def main(quick: bool = False) -> None:
+    rep = Reporter("correctness_table1")
+    names = list(PAPER_DATASETS)
+    if quick:
+        names = ["vehicle", "splice", "vowel"]
+    for name in names:
+        run_dataset(name, rep, seeds=(0,) if quick else (0, 1, 2))
+    rep.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Pallas kernel benchmarks: allclose vs oracle across a shape sweep +
+CPU timings of the oracle path (kernel wall-time is TPU-only; interpret
+mode times are reported for completeness, not as perf claims).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Reporter, timeit
+from repro.kernels import ops, ref
+
+
+def main(quick: bool = False) -> None:
+    rep = Reporter("kernels")
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+
+    # tree_hist sweep
+    sweeps = [(2048, 14, 8, 17, 2), (4096, 54, 16, 17, 7)]
+    if quick:
+        sweeps = sweeps[:1]
+    for n, d, L, B1, K in sweeps:
+        bin_idx = jax.random.randint(ks[0], (n, d), 0, B1)
+        leaf = jax.random.randint(ks[1], (n,), 0, L)
+        wy = jax.random.uniform(ks[2], (n, K))
+        a = ops.tree_hist(bin_idx, leaf, wy, n_leaves=L, n_bins_p1=B1,
+                          use_pallas=True, block_s=512, block_d=8)
+        b = ref.tree_hist_ref(bin_idx, leaf, wy, L, B1)
+        err = float(jnp.max(jnp.abs(a - b)))
+        t = timeit(
+            lambda: jax.block_until_ready(
+                ref.tree_hist_ref(bin_idx, leaf, wy, L, B1)
+            )
+        )
+        rep.add(f"tree_hist_n{n}_d{d}_K{K}", us_per_call=t * 1e6, max_err=err)
+
+    # flash attention sweep
+    for (S, T, Hq, Hkv, win, cap) in [(256, 256, 8, 2, None, None), (256, 256, 4, 4, 128, 50.0)]:
+        q = jax.random.normal(ks[3], (1, Hq, S, 64), jnp.float32)
+        k = jax.random.normal(ks[4], (1, Hkv, T, 64), jnp.float32)
+        v = jax.random.normal(ks[5], (1, Hkv, T, 64), jnp.float32)
+        a = ops.attention(q, k, v, use_pallas=True, causal=True, window=win,
+                          softcap=cap, block_q=128, block_k=128)
+        b = ref.attention_ref(q, k, v, causal=True, window=win, softcap=cap)
+        err = float(jnp.max(jnp.abs(a - b)))
+        t = timeit(
+            lambda: jax.block_until_ready(
+                ref.attention_ref(q, k, v, causal=True, window=win, softcap=cap)
+            )
+        )
+        rep.add(f"flash_S{S}_H{Hq}kv{Hkv}_w{win}_cap{cap}", us_per_call=t * 1e6, max_err=err)
+
+    # boost update
+    n = 65536
+    H = 16
+    preds = jax.random.randint(ks[6], (H, n), 0, 8)
+    y = jax.random.randint(ks[7], (n,), 0, 8)
+    w = jax.random.uniform(ks[0], (n,))
+    a = ops.weighted_errors(preds, y, w, use_pallas=True)
+    b = ref.weighted_errors_ref(preds, y, w)
+    err = float(jnp.max(jnp.abs(a - b)))
+    t = timeit(lambda: jax.block_until_ready(ref.weighted_errors_ref(preds, y, w)))
+    rep.add(f"weighted_errors_H{H}_n{n}", us_per_call=t * 1e6, max_err=err)
+    rep.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Paper Fig. 4a: aggregated AdaBoost.F F1 vs federated round on every
+dataset analogue (the 'dip then monotone growth' shape, and the 'few tens
+of rounds suffice' observation).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Reporter
+from repro.core.plan import adaboost_plan
+from repro.data import PAPER_DATASETS, get_dataset
+from repro.fl.federation import Federation
+from repro.fl.partition import iid_partition
+from repro.learners import LearnerSpec
+
+ROUNDS = 30
+
+
+def main(quick: bool = False) -> None:
+    rep = Reporter("learning_curves_fig4a")
+    names = ["vehicle", "vowel", "splice"] if quick else list(PAPER_DATASETS)
+    rounds = 10 if quick else ROUNDS
+    for name in names:
+        if name in ("forestcover", "letter") and not quick:
+            r = 10  # big analogues: fewer rounds on CPU
+        else:
+            r = rounds
+        key = jax.random.PRNGKey(0)
+        k1, k2, k3 = jax.random.split(key, 3)
+        dspec, (Xtr, ytr, Xte, yte) = get_dataset(name, k1)
+        lspec = LearnerSpec("decision_tree", dspec.n_features, dspec.n_classes,
+                            {"depth": 4, "n_bins": 16})
+        Xs, ys, masks = iid_partition(Xtr, ytr, 9, k2)
+        fed = Federation(adaboost_plan(rounds=r), Xs, ys, masks, Xte, yte, lspec, k3)
+        hist = fed.run(eval_every=2)
+        curve = {f"f1_r{h['round']+1}": round(h["f1"], 4) for h in hist}
+        rep.add(name, rounds=r, **curve)
+    rep.finish()
+
+
+if __name__ == "__main__":
+    main()

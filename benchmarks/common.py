@@ -1,0 +1,43 @@
+"""Shared helpers for the benchmark suite (one module per paper artifact)."""
+from __future__ import annotations
+
+import csv
+import io
+import json
+import time
+from pathlib import Path
+from typing import Any, Dict, List
+
+RESULTS_DIR = Path(__file__).resolve().parent.parent / "experiments" / "bench"
+
+
+class Reporter:
+    """Collects (name, us_per_call, derived) rows and writes CSV + JSON."""
+
+    def __init__(self, bench: str):
+        self.bench = bench
+        self.rows: List[Dict[str, Any]] = []
+
+    def add(self, name: str, us_per_call: float | None = None, **derived: Any) -> None:
+        row = {"name": name, "us_per_call": us_per_call, **derived}
+        self.rows.append(row)
+        d = ",".join(f"{k}={v}" for k, v in derived.items())
+        us = f"{us_per_call:.1f}" if us_per_call is not None else ""
+        print(f"{self.bench}/{name},{us},{d}", flush=True)
+
+    def finish(self) -> None:
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        (RESULTS_DIR / f"{self.bench}.json").write_text(json.dumps(self.rows, indent=2))
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]

@@ -1,0 +1,59 @@
+"""Benchmark harness (deliverable d) — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Output: `bench/name,us_per_call,derived` CSV lines + JSON under
+experiments/bench/.  The dry-run roofline tables are produced separately
+by launch/dryrun.py + benchmarks/summarize.py.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    bench_correctness,
+    bench_flexibility,
+    bench_kernels,
+    bench_learning_curves,
+    bench_optimizations,
+    bench_scaling,
+)
+
+BENCHES = {
+    "kernels": bench_kernels.main,  # fastest first
+    "optimizations_fig3": bench_optimizations.main,
+    "flexibility_fig4b": bench_flexibility.main,
+    "learning_curves_fig4a": bench_learning_curves.main,
+    "scaling_fig5": bench_scaling.main,
+    "correctness_table1": bench_correctness.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", choices=sorted(BENCHES))
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            fn(quick=args.quick)
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

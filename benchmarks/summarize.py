@@ -1,0 +1,108 @@
+"""Turn experiments/dryrun/*.json + experiments/bench/*.json into the
+EXPERIMENTS.md §Dry-run / §Roofline markdown tables.
+
+  PYTHONPATH=src python -m benchmarks.summarize [--write]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DRYRUN = ROOT / "experiments" / "dryrun"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k", "fl_round"]
+
+
+def load(mesh: str):
+    rows = []
+    for p in sorted(DRYRUN.glob(f"*__{mesh}.json")):
+        rows.append(json.loads(p.read_text()))
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    return rows
+
+
+def fmt_si(x, unit=""):
+    if x is None:
+        return "-"
+    x = float(x)
+    for mag, suf in [(1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "k")]:
+        if abs(x) >= mag:
+            return f"{x/mag:.2f}{suf}{unit}"
+    return f"{x:.2f}{unit}"
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = load(mesh)
+    out = [
+        f"| arch | shape | status | compile(s) scan/unroll | args/dev | temp/dev | collective ops |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | SKIP (noted) | - | - | - | - |")
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | **FAIL**: {r['error'][:60]} | - | - | - | - |")
+            continue
+        cs = r.get("compile_seconds", 0)
+        cs_str = f"{cs['scanned']}/{cs['unrolled']}" if isinstance(cs, dict) else str(cs)
+        mem = r.get("memory", {})
+        ops = ", ".join(f"{k}x{v}" for k, v in sorted(r["collectives"]["ops"].items()))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | {cs_str} "
+            f"| {fmt_si(mem.get('argument_size_in_bytes'),'B')} "
+            f"| {fmt_si(mem.get('temp_size_in_bytes'),'B')} | {ops or '-'} |"
+        )
+    return "\n".join(out)
+
+
+def roofline_table(mesh: str = "single") -> str:
+    rows = [r for r in load(mesh) if "roofline" in r]
+    out = [
+        "| arch | shape | compute(s) | memory(s) | collective(s) | bottleneck | "
+        "MODEL_FLOPs | useful ratio | wire/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        t = r["roofline"]
+        if "useful_flops_ratio" not in r:
+            r = {**r, "useful_flops_ratio": None, "model_flops_total": None}
+        out.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} | {t['collective_s']:.4f} "
+            f"| **{t['bottleneck'].replace('_s','')}** "
+            f"| {fmt_si(r.get('model_flops_total'))} "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {fmt_si(r['collectives']['wire_bytes'],'B')} |"
+            if r.get("useful_flops_ratio") is not None
+            else f"| {r['arch']} | {r['shape']} "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} | {t['collective_s']:.4f} "
+            f"| **{t['bottleneck'].replace('_s','')}** | - | - "
+            f"| {fmt_si(r['collectives']['wire_bytes'],'B')} |"
+        )
+    return "\n".join(out)
+
+
+def counts(mesh: str):
+    rows = load(mesh)
+    ok = sum(1 for r in rows if "roofline" in r)
+    skip = sum(1 for r in rows if "skipped" in r)
+    fail = sum(1 for r in rows if "error" in r)
+    return ok, skip, fail
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    ok, skip, fail = counts(args.mesh)
+    print(f"### Dry-run ({args.mesh}): {ok} ok, {skip} skipped (noted), {fail} failed\n")
+    print(dryrun_table(args.mesh))
+    print("\n### Roofline\n")
+    print(roofline_table(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Checkpointing: pytree <-> .npz + structure manifest.
+
+Works for both workflows — DNN TrainState pytrees and MAFL ensembles
+(whole-model checkpoints are exactly what the model-agnostic wire format
+already supports: fixed-shape leaves + a treedef).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def save_checkpoint(tree: Any, path: str | Path) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    np.savez(path.with_suffix(".npz"), **arrays)
+    path.with_suffix(".json").write_text(json.dumps({"n_leaves": len(leaves)}))
+
+
+def load_checkpoint(like: Any, path: str | Path) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    path = Path(path)
+    data = np.load(path.with_suffix(".npz"))
+    leaves, treedef = jax.tree.flatten(like)
+    out = []
+    for i, ref in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        if tuple(arr.shape) != tuple(np.shape(ref)):
+            raise ValueError(f"leaf {i}: checkpoint {arr.shape} != expected {np.shape(ref)}")
+        out.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,1 @@
+from repro.configs.base import INPUT_SHAPES, ArchConfig, InputShape, all_archs, get_arch

@@ -1,0 +1,223 @@
+"""Architecture configuration schema + registry.
+
+Each assigned architecture gets one file in this package defining an
+``ArchConfig`` with the exact published dimensions (source cited in
+``source``), plus a ``reduced()`` smoke variant (<=2 layers, d_model<=512,
+<=4 experts) for CPU tests.  ``pattern()`` expands the architecture into
+a repeating unit of per-layer descriptors — the model stack scans over
+unit repeats so compile size is O(|unit|), not O(n_layers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerDesc:
+    mixer: str  # attn_full | attn_local | attn_chunked | mamba | mlstm | slstm
+    ffn: str  # swiglu | geglu | gelu | moe | none
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    arch_type: str  # dense | ssm | moe | audio | vlm | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    source: str
+    head_dim: Optional[int] = None  # default d_model // n_heads
+
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_every: int = 1  # MoE FFN on every k-th layer (jamba: 2)
+    capacity_factor: float = 1.25
+
+    # Attention / mixer pattern
+    layer_pattern: str = "full"  # full | local_global | chunked_global | mamba_attn | xlstm
+    window: Optional[int] = None  # sliding-window / chunk size for local layers
+    pattern_period: int = 1  # layers per repeating unit
+    attn_index: int = 0  # position of the attention layer inside a hybrid unit
+    logit_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    mlp_type: str = "swiglu"  # swiglu | geglu | gelu
+
+    # SSM
+    d_state: int = 16
+    d_conv: int = 4
+    ssm_expand: int = 2
+    slstm_every: int = 0  # xlstm: one sLSTM block per k blocks (0 = none)
+
+    # Modality frontends (STUBS per the brief — backbone consumes embeddings)
+    encoder_layers: int = 0  # whisper audio encoder depth
+    encoder_seq: int = 0  # post-conv mel frames (whisper-large: 1500)
+    prefix_tokens: int = 0  # VLM patch-embedding prefix length
+
+    # Misc
+    tie_embeddings: bool = False
+    embed_scale: bool = False  # gemma multiplies embeddings by sqrt(d)
+    pos_emb: str = "rope"  # rope | sinusoidal (whisper)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    post_norm: bool = False  # gemma2 extra post-norms
+    dtype: str = "bfloat16"
+
+    # Distribution
+    fsdp: bool = False  # additionally shard big param dims over the data axis
+    remat: bool = True
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def padded_vocab(self, multiple: int = 2048) -> int:
+        return -(-self.vocab_size // multiple) * multiple
+
+    def pattern(self) -> Tuple[Tuple[LayerDesc, ...], int]:
+        """(repeating unit of layer descriptors, n_repeats)."""
+
+        def ffn_for(idx_in_unit: int, base: str) -> str:
+            if self.is_moe and (idx_in_unit % self.moe_every == self.moe_every - 1):
+                return "moe"
+            return base
+
+        if self.layer_pattern == "full":
+            period = self.moe_every if self.is_moe else 1
+            unit = tuple(LayerDesc("attn_full", ffn_for(i, self.mlp_type)) for i in range(period))
+            assert self.n_layers % period == 0
+            return unit, self.n_layers // period
+        if self.layer_pattern == "local_global":
+            # gemma2: alternating sliding-window / full attention
+            unit = (LayerDesc("attn_local", self.mlp_type), LayerDesc("attn_full", self.mlp_type))
+            assert self.n_layers % 2 == 0
+            return unit, self.n_layers // 2
+        if self.layer_pattern == "chunked_global":
+            # llama4: 3 chunked-local layers then 1 full (RoPE-less) layer
+            p = self.pattern_period
+            unit = tuple(
+                LayerDesc("attn_local" if i < p - 1 else "attn_full", ffn_for(i, self.mlp_type))
+                for i in range(p)
+            )
+            assert self.n_layers % p == 0
+            return unit, self.n_layers // p
+        if self.layer_pattern == "mamba_attn":
+            # jamba: one attention layer per ``pattern_period`` (rest mamba),
+            # MoE FFN every ``moe_every``-th layer
+            p = self.pattern_period
+            unit = tuple(
+                LayerDesc(
+                    "attn_full" if i == self.attn_index else "mamba",
+                    ffn_for(i, self.mlp_type),
+                )
+                for i in range(p)
+            )
+            assert self.n_layers % p == 0
+            return unit, self.n_layers // p
+        if self.layer_pattern == "xlstm":
+            # xLSTM [k-1 : 1] mLSTM : sLSTM blocks; blocks carry their own
+            # projections, no separate FFN
+            p = self.slstm_every or 1
+            unit = tuple(
+                LayerDesc("slstm" if (self.slstm_every and i == p - 1) else "mlstm", "none")
+                for i in range(p)
+            )
+            assert self.n_layers % p == 0
+            return unit, self.n_layers // p
+        raise ValueError(f"unknown layer_pattern {self.layer_pattern!r}")
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: same family, tiny dims (<=2 units)."""
+        unit, _ = self.pattern()
+        period = len(unit)
+        hd = 32
+        heads = max(2, min(4, self.n_heads))
+        kv = max(1, min(self.n_kv_heads, heads))
+        return dataclasses.replace(
+            self,
+            n_layers=period * (2 if period <= 4 else 1),
+            d_model=128,
+            n_heads=heads,
+            n_kv_heads=kv,
+            head_dim=hd,
+            d_ff=0 if self.d_ff == 0 else 256,
+            vocab_size=512,
+            n_experts=min(self.n_experts, 4),
+            # Effectively drop-free (cap >= all tokens on one expert): the
+            # untrained router is highly skewed at smoke scale, and the
+            # decode-vs-forward consistency tests require no capacity drops.
+            # Full configs keep the realistic 1.25.
+            capacity_factor=float(2 * max(self.n_experts, 1)),
+            window=min(self.window, 64) if self.window else None,
+            encoder_layers=min(self.encoder_layers, 2),
+            encoder_seq=min(self.encoder_seq, 32) if self.encoder_seq else 0,
+            prefix_tokens=min(self.prefix_tokens, 16) if self.prefix_tokens else 0,
+            d_state=8,
+            fsdp=False,
+            dtype="float32",
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+_ARCH_REGISTRY: Dict[str, ArchConfig] = {}
+
+
+def register_arch(cfg: ArchConfig) -> ArchConfig:
+    _ARCH_REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_arch(name: str) -> ArchConfig:
+    if not _ARCH_REGISTRY:
+        _load_all()
+    if name not in _ARCH_REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_ARCH_REGISTRY)}")
+    return _ARCH_REGISTRY[name]
+
+
+def all_archs() -> Dict[str, ArchConfig]:
+    if not _ARCH_REGISTRY:
+        _load_all()
+    return dict(_ARCH_REGISTRY)
+
+
+def _load_all() -> None:
+    import importlib
+
+    for mod in (
+        "gemma_2b",
+        "xlstm_1_3b",
+        "grok_1_314b",
+        "whisper_large_v3",
+        "internvl2_26b",
+        "granite_34b",
+        "stablelm_3b",
+        "jamba_v0_1_52b",
+        "gemma2_27b",
+        "llama4_scout_17b_a16e",
+    ):
+        importlib.import_module(f"repro.configs.{mod}")

@@ -1,0 +1,25 @@
+"""gemma2-27b [dense] — alternating local(4096)/global attention, logit
+softcaps (attn 50, final 30), GeGLU, post-norms [arXiv:2408.00118]."""
+from repro.configs.base import ArchConfig, register_arch
+
+GEMMA2_27B = register_arch(ArchConfig(
+    name="gemma2-27b",
+    arch_type="dense",
+    n_layers=46,
+    d_model=4608,
+    n_heads=32,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=36864,
+    vocab_size=256000,
+    mlp_type="geglu",
+    layer_pattern="local_global",
+    window=4096,
+    logit_softcap=50.0,
+    final_softcap=30.0,
+    post_norm=True,
+    tie_embeddings=True,
+    embed_scale=True,
+    fsdp=True,
+    source="arXiv:2408.00118 (Gemma 2: Improving Open Language Models...)",
+))

@@ -1,0 +1,19 @@
+"""granite-34b [dense] — llama-arch code model, MQA (kv=1), 88 layers
+[arXiv:2405.04324]."""
+from repro.configs.base import ArchConfig, register_arch
+
+GRANITE_34B = register_arch(ArchConfig(
+    name="granite-34b",
+    arch_type="dense",
+    n_layers=88,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=49152,
+    mlp_type="swiglu",
+    layer_pattern="full",
+    fsdp=True,
+    source="arXiv:2405.04324 (Granite Code Models)",
+))

@@ -1,0 +1,21 @@
+"""internvl2-26b [vlm] — InternViT vision encoder is a STUB (input_specs
+provides patch embeddings, prefix_tokens=1024); backbone is the
+InternLM2-20B decoder [arXiv:2404.16821]."""
+from repro.configs.base import ArchConfig, register_arch
+
+INTERNVL2_26B = register_arch(ArchConfig(
+    name="internvl2-26b",
+    arch_type="vlm",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=92553,
+    mlp_type="swiglu",
+    layer_pattern="full",
+    prefix_tokens=1024,  # ViT patch embeddings after pixel-shuffle + projector
+    fsdp=True,
+    source="arXiv:2404.16821 (InternVL 1.5/2 technical report)",
+))

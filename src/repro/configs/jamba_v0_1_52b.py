@@ -1,0 +1,25 @@
+"""jamba-v0.1-52b [hybrid] — Mamba + attention 1:7 interleave, MoE 16
+experts top-2 on every other layer [arXiv:2403.19887]."""
+from repro.configs.base import ArchConfig, register_arch
+
+JAMBA_V0_1_52B = register_arch(ArchConfig(
+    name="jamba-v0.1-52b",
+    arch_type="hybrid",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65536,
+    n_experts=16,
+    experts_per_token=2,
+    moe_every=2,
+    layer_pattern="mamba_attn",
+    pattern_period=8,  # one attention layer per 8 (1:7)
+    attn_index=4,
+    d_state=16,
+    mlp_type="swiglu",
+    fsdp=True,
+    source="arXiv:2403.19887 (Jamba: A Hybrid Transformer-Mamba Language Model)",
+))

@@ -1,0 +1,16 @@
+"""The paper's own workload configuration (MAFL §5): AdaBoost.F over
+10-leaf decision trees — here a depth-4 oblivious tree (DESIGN.md §2).
+Not an ArchConfig: this is a federation Plan + learner spec.
+"""
+from repro.core.plan import adaboost_plan
+from repro.learners import LearnerSpec
+
+
+def paper_plan(rounds: int = 100):
+    return adaboost_plan(rounds=rounds)
+
+
+def paper_learner_spec(n_features: int, n_classes: int) -> LearnerSpec:
+    return LearnerSpec(
+        "decision_tree", n_features, n_classes, {"depth": 4, "n_bins": 16}
+    )

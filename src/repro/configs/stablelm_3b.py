@@ -1,0 +1,18 @@
+"""stablelm-3b [dense] — MHA (kv=32), SwiGLU, d_ff=6912
+[hf:stabilityai/stablelm-2-1_6b family]."""
+from repro.configs.base import ArchConfig, register_arch
+
+STABLELM_3B = register_arch(ArchConfig(
+    name="stablelm-3b",
+    arch_type="dense",
+    n_layers=32,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=6912,
+    vocab_size=50304,
+    mlp_type="swiglu",
+    layer_pattern="full",
+    fsdp=False,
+    source="hf:stabilityai/stablelm-2-1_6b / stablelm-3b-4e1t model cards",
+))

@@ -1,0 +1,22 @@
+"""whisper-large-v3 [audio] — enc-dec transformer backbone; the
+mel-spectrogram conv frontend is a STUB (input_specs provides frame
+embeddings [B, 1500, d]) [arXiv:2212.04356]."""
+from repro.configs.base import ArchConfig, register_arch
+
+WHISPER_LARGE_V3 = register_arch(ArchConfig(
+    name="whisper-large-v3",
+    arch_type="audio",
+    n_layers=32,  # decoder depth
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab_size=51866,
+    mlp_type="gelu",
+    pos_emb="sinusoidal",
+    layer_pattern="full",
+    encoder_layers=32,
+    encoder_seq=1500,  # 30s of audio after the conv downsampler
+    fsdp=False,
+    source="arXiv:2212.04356 (Robust Speech Recognition / Whisper); large-v3 card",
+))

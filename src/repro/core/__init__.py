@@ -1,0 +1,1 @@
+"""MAFL core: model-agnostic federated boosting + framework substrate."""

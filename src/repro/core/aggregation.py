@@ -1,0 +1,73 @@
+"""Model-agnostic aggregation strategies, instantiated dynamically from
+the Plan (paper §4.3: "handle aggregation functions instantiated
+dynamically from the plan file").
+
+Two kinds of artifact flow through MAFL:
+  * tensor updates (the classic DNN workflow)  -> ``fedavg`` and friends
+  * whole models (the model-agnostic workflow) -> ensemble strategies in
+    ``core/boosting.py`` (selected here by name)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg(stacked: Any, sizes: jax.Array) -> Any:
+    """Dataset-size-weighted average of collaborator pytrees.
+
+    stacked: pytree with leading collaborator dim C; sizes: [C].
+    """
+    wt = sizes / jnp.maximum(jnp.sum(sizes), 1e-12)
+
+    def avg(leaf):
+        w = wt.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+        return jnp.sum(leaf * w, axis=0)
+
+    return jax.tree.map(avg, stacked)
+
+
+def fedavg_delta(global_params: Any, local_stacked: Any, sizes: jax.Array) -> Any:
+    """FedAvg expressed on deltas (numerically kinder for bf16 params)."""
+    delta = jax.tree.map(lambda l, g: l - g[None], local_stacked, global_params)
+    avg = fedavg(delta, sizes)
+    return jax.tree.map(lambda g, d: g + d.astype(g.dtype), global_params, avg)
+
+
+def median_aggregate(stacked: Any, sizes: jax.Array) -> Any:
+    """Coordinate-wise median — a robust baseline the Plan can select."""
+    del sizes
+    return jax.tree.map(lambda leaf: jnp.median(leaf, axis=0), stacked)
+
+
+def trimmed_mean(stacked: Any, sizes: jax.Array, trim: float = 0.2) -> Any:
+    del sizes
+
+    def agg(leaf):
+        C = leaf.shape[0]
+        k = int(C * trim)
+        srt = jnp.sort(leaf, axis=0)
+        kept = srt[k : C - k] if C - 2 * k > 0 else srt
+        return jnp.mean(kept, axis=0)
+
+    return jax.tree.map(agg, stacked)
+
+
+TENSOR_AGGREGATORS: Dict[str, Callable] = {
+    "fedavg": fedavg,
+    "fedavg_delta": fedavg_delta,
+    "median": median_aggregate,
+    "trimmed_mean": trimmed_mean,
+}
+
+# Whole-model (model-agnostic) strategies live in core/boosting.py; the
+# Plan selects them by the same-name round functions.
+MODEL_AGNOSTIC_ALGORITHMS = ("adaboost_f", "distboost_f", "preweak_f", "bagging")
+
+
+def get_tensor_aggregator(name: str) -> Callable:
+    if name not in TENSOR_AGGREGATORS:
+        raise KeyError(f"unknown aggregator {name!r}; have {sorted(TENSOR_AGGREGATORS)}")
+    return TENSOR_AGGREGATORS[name]

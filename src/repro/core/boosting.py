@@ -1,0 +1,336 @@
+"""Model-agnostic federated boosting — AdaBoost.F, DistBoost.F, PreWeak.F
+and Federated Bagging (paper §3, Fig. 1), plus the centralized AdaBoost
+(SAMME) oracle used as the Table-1 "Reference".
+
+Data layout: collaborator-stacked fixed shapes —
+    X [C, n, d]   y [C, n]   mask [C, n]  (padding -> mask 0)
+Sample weights live in the state as w [C, n], globally normalised
+(sum over ALL collaborators == 1), exactly the quantity the paper's
+step-1 "dataset size N" exchange exists to maintain.
+
+Everything here is pure and jit-able; ``fl/sharded.py`` re-expresses the
+same round as an SPMD program over the mesh's data axis, where the
+``all_hypotheses`` stacking below becomes ``lax.all_gather`` and the
+error-matrix reduction becomes ``lax.psum``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.learners.base import LearnerSpec, WeakLearner
+
+# ---------------------------------------------------------------------------
+# Ensemble (the "strong hypothesis")
+# ---------------------------------------------------------------------------
+
+
+class Ensemble(NamedTuple):
+    """Pre-allocated strong hypothesis: T slots of weak-hypothesis pytrees."""
+
+    params: Any  # pytree, every leaf has leading dim T (or [T, C] for committees)
+    alpha: jax.Array  # [T]
+    count: jax.Array  # scalar i32 — slots used so far
+
+
+def _stack_slots(template: Any, T: int) -> Any:
+    return jax.tree.map(lambda x: jnp.zeros((T,) + x.shape, x.dtype), template)
+
+
+def _take_slot(params: Any, t) -> Any:
+    return jax.tree.map(lambda x: x[t], params)
+
+
+def _set_slot(buf: Any, t, value: Any) -> Any:
+    return jax.tree.map(lambda b, v: b.at[t].set(v), buf, value)
+
+
+def init_ensemble(learner: WeakLearner, spec: LearnerSpec, T: int, key: jax.Array,
+                  committee_size: int | None = None) -> Ensemble:
+    proto = learner.init(spec, key)
+    if committee_size is not None:  # DistBoost.F stores a committee per round
+        proto = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (committee_size,) + x.shape), proto
+        )
+    return Ensemble(
+        params=_stack_slots(proto, T),
+        alpha=jnp.zeros((T,), jnp.float32),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def ensemble_votes(
+    learner: WeakLearner, spec: LearnerSpec, ens: Ensemble, X: jax.Array,
+    *, committee: bool = False,
+) -> jax.Array:
+    """alpha-weighted vote tally [n, K] over the used slots."""
+    T = ens.alpha.shape[0]
+
+    def member_pred(params_t):
+        if committee:  # majority vote of the committee members first
+            preds = jax.vmap(lambda p: learner.predict(spec, p, X))(params_t)  # [C, n]
+            tally = jnp.sum(jax.nn.one_hot(preds, spec.n_classes), axis=0)  # [n, K]
+            return jnp.argmax(tally, axis=-1).astype(jnp.int32)
+        return learner.predict(spec, params_t, X)
+
+    preds = jax.vmap(lambda t: member_pred(_take_slot(ens.params, t)))(jnp.arange(T))  # [T, n]
+    used = (jnp.arange(T) < ens.count).astype(jnp.float32) * ens.alpha  # [T]
+    onehot = jax.nn.one_hot(preds, spec.n_classes)  # [T, n, K]
+    return jnp.einsum("t,tnk->nk", used, onehot)
+
+
+def strong_predict(learner, spec, ens: Ensemble, X, *, committee: bool = False) -> jax.Array:
+    return jnp.argmax(ensemble_votes(learner, spec, ens, X, committee=committee), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Shared round machinery
+# ---------------------------------------------------------------------------
+
+
+class BoostState(NamedTuple):
+    ensemble: Ensemble
+    weights: jax.Array  # [C, n] — globally normalised sample weights
+    key: jax.Array
+
+
+def init_boost_state(
+    learner: WeakLearner,
+    spec: LearnerSpec,
+    T: int,
+    mask: jax.Array,  # [C, n]
+    key: jax.Array,
+    *,
+    committee_size: int | None = None,
+) -> BoostState:
+    k1, k2 = jax.random.split(key)
+    w = mask / jnp.maximum(jnp.sum(mask), 1.0)  # uniform over the GLOBAL dataset
+    return BoostState(
+        ensemble=init_ensemble(learner, spec, T, k1, committee_size=committee_size),
+        weights=w.astype(jnp.float32),
+        key=k2,
+    )
+
+
+def _local_fits(learner, spec, w, X, y, key):
+    """Train one weak hypothesis per collaborator (paper step 2). [C, ...]"""
+    C = X.shape[0]
+    keys = jax.random.split(key, C)
+    dummy = learner.init(spec, key)
+
+    def fit_one(Xi, yi, wi, ki):
+        return learner.fit(spec, dummy, Xi, yi, wi, ki)
+
+    return jax.vmap(fit_one)(X, y, w, keys)
+
+
+def _error_matrix(learner, spec, hyp_stacked, X, y, w):
+    """eps[i, j] = weighted error of hypothesis j on collaborator i's data
+    (paper step 3: each client evaluates the whole hypothesis space)."""
+
+    def on_collab(Xi, yi, wi):
+        def of_hyp(pj):
+            mis = (learner.predict(spec, pj, Xi) != yi).astype(jnp.float32)
+            return jnp.sum(wi * mis)
+
+        return jax.vmap(of_hyp)(hyp_stacked)
+
+    return jax.vmap(on_collab)(X, y, w)  # [C, H]
+
+
+def _samme_alpha(eps: jax.Array, n_classes: int) -> jax.Array:
+    eps = jnp.clip(eps, 1e-10, 1.0 - 1e-10)
+    return jnp.clip(jnp.log((1.0 - eps) / eps) + jnp.log(n_classes - 1.0), -10.0, 10.0)
+
+
+def _update_weights(learner, spec, chosen, alpha, w, X, y, mask):
+    """w <- w * exp(alpha * 1[mispredict]) then global renormalisation
+    (paper step 4; the renormalisation is why norms are exchanged)."""
+
+    def mis_one(Xi, yi):
+        return (learner.predict(spec, chosen, Xi) != yi).astype(jnp.float32)
+
+    mis = jax.vmap(mis_one)(X, y)  # [C, n]
+    w = w * jnp.exp(alpha * mis) * mask
+    return w / jnp.maximum(jnp.sum(w), 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# AdaBoost.F (paper's implemented algorithm)
+# ---------------------------------------------------------------------------
+
+
+def adaboost_f_round(
+    learner: WeakLearner,
+    spec: LearnerSpec,
+    state: BoostState,
+    X: jax.Array,
+    y: jax.Array,
+    mask: jax.Array,
+) -> Tuple[BoostState, Dict[str, jax.Array]]:
+    key, kfit = jax.random.split(state.key)
+    w = state.weights
+
+    # step 2: local training + hypothesis-space broadcast
+    hyps = _local_fits(learner, spec, w, X, y, kfit)  # [C, ...]
+    # step 3: every client evaluates every hypothesis on its local shard
+    errs = _error_matrix(learner, spec, hyps, X, y, w)  # [C, C]
+    # step 4 (aggregator): globally-weighted error, best hypothesis, alpha
+    eps = jnp.sum(errs, axis=0)  # weights are globally normalised: sum_i ||w_i|| == 1
+    c = jnp.argmin(eps)
+    alpha = _samme_alpha(eps[c], spec.n_classes)
+    chosen = _take_slot(hyps, c)
+
+    ens = state.ensemble
+    ens = Ensemble(
+        params=_set_slot(ens.params, ens.count, chosen),
+        alpha=ens.alpha.at[ens.count].set(alpha),
+        count=ens.count + 1,
+    )
+    w = _update_weights(learner, spec, chosen, alpha, w, X, y, mask)
+    metrics = {"epsilon": eps[c], "alpha": alpha, "chosen": c.astype(jnp.int32)}
+    return BoostState(ens, w, key), metrics
+
+
+# ---------------------------------------------------------------------------
+# DistBoost.F — the round hypothesis is the committee of all local models
+# ---------------------------------------------------------------------------
+
+
+def _committee_predict(learner, spec, committee, X):
+    preds = jax.vmap(lambda p: learner.predict(spec, p, X))(committee)  # [C, n]
+    tally = jnp.sum(jax.nn.one_hot(preds, spec.n_classes), axis=0)
+    return jnp.argmax(tally, axis=-1).astype(jnp.int32)
+
+
+def distboost_f_round(learner, spec, state, X, y, mask):
+    key, kfit = jax.random.split(state.key)
+    w = state.weights
+    committee = _local_fits(learner, spec, w, X, y, kfit)  # [C, ...]
+
+    def mis_one(Xi, yi):
+        return (_committee_predict(learner, spec, committee, Xi) != yi).astype(jnp.float32)
+
+    mis = jax.vmap(mis_one)(X, y)  # [C, n]
+    eps = jnp.sum(w * mis)
+    alpha = _samme_alpha(eps, spec.n_classes)
+
+    ens = state.ensemble
+    ens = Ensemble(
+        params=_set_slot(ens.params, ens.count, committee),
+        alpha=ens.alpha.at[ens.count].set(alpha),
+        count=ens.count + 1,
+    )
+    w = w * jnp.exp(alpha * mis) * mask
+    w = w / jnp.maximum(jnp.sum(w), 1e-30)
+    metrics = {"epsilon": eps, "alpha": alpha, "chosen": jnp.zeros((), jnp.int32)}
+    return BoostState(ens, w, key), metrics
+
+
+# ---------------------------------------------------------------------------
+# PreWeak.F — search a pre-trained C x T hypothesis space
+# ---------------------------------------------------------------------------
+
+
+def preweak_f_setup(learner, spec, state, X, y, mask, T: int):
+    """Fuse steps 1+2: every collaborator runs T rounds of LOCAL AdaBoost,
+    shipping all T hypotheses; the federation then owns a C*T space."""
+    C, n = y.shape
+    keys = jax.random.split(state.key, C + 1)
+
+    def local_adaboost(Xi, yi, mi, ki):
+        wi = mi / jnp.maximum(jnp.sum(mi), 1.0)
+        dummy = learner.init(spec, ki)
+
+        def round_(carry, kt):
+            w, _ = carry, None
+            p = learner.fit(spec, dummy, Xi, yi, w, kt)
+            mis = (learner.predict(spec, p, Xi) != yi).astype(jnp.float32)
+            e = jnp.sum(w * mis) / jnp.maximum(jnp.sum(w), 1e-30)
+            a = _samme_alpha(e, spec.n_classes)
+            w = w * jnp.exp(a * mis) * mi
+            w = w / jnp.maximum(jnp.sum(w), 1e-30)
+            return w, p
+
+        _, ps = jax.lax.scan(round_, wi, jax.random.split(ki, T))
+        return ps  # [T, ...]
+
+    hyps = jax.vmap(local_adaboost)(X, y, mask, keys[:C])  # [C, T, ...]
+    flat = jax.tree.map(lambda x: x.reshape((C * T,) + x.shape[2:]), hyps)
+    return flat, BoostState(state.ensemble, state.weights, keys[-1])
+
+
+def preweak_f_round(learner, spec, state, hyp_space, X, y, mask):
+    """Rounds loop only on steps 3-4 (red dotted line in Fig. 1)."""
+    key = state.key
+    w = state.weights
+    errs = _error_matrix(learner, spec, hyp_space, X, y, w)  # [C, C*T]
+    eps = jnp.sum(errs, axis=0)
+    c = jnp.argmin(eps)
+    alpha = _samme_alpha(eps[c], spec.n_classes)
+    chosen = _take_slot(hyp_space, c)
+
+    ens = state.ensemble
+    ens = Ensemble(
+        params=_set_slot(ens.params, ens.count, chosen),
+        alpha=ens.alpha.at[ens.count].set(alpha),
+        count=ens.count + 1,
+    )
+    w = _update_weights(learner, spec, chosen, alpha, w, X, y, mask)
+    metrics = {"epsilon": eps[c], "alpha": alpha, "chosen": c.astype(jnp.int32)}
+    return BoostState(ens, w, key), metrics
+
+
+# ---------------------------------------------------------------------------
+# Federated Bagging — omit adaboost_update (paper §4.1)
+# ---------------------------------------------------------------------------
+
+
+def bagging_round(learner, spec, state, X, y, mask):
+    key, kfit, kpick = jax.random.split(state.key, 3)
+    w = mask / jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)  # local-uniform
+    hyps = _local_fits(learner, spec, w, X, y, kfit)
+    c = jax.random.randint(kpick, (), 0, X.shape[0])  # rotate members round-robin-ish
+    ens = state.ensemble
+    ens = Ensemble(
+        params=_set_slot(ens.params, ens.count, _take_slot(hyps, c)),
+        alpha=ens.alpha.at[ens.count].set(1.0),  # unweighted vote
+        count=ens.count + 1,
+    )
+    metrics = {"epsilon": jnp.zeros(()), "alpha": jnp.ones(()), "chosen": c.astype(jnp.int32)}
+    return BoostState(ens, state.weights, key), metrics
+
+
+# ---------------------------------------------------------------------------
+# Centralized AdaBoost (SAMME) — Table 1 "Reference" oracle
+# ---------------------------------------------------------------------------
+
+
+def centralized_adaboost(
+    learner: WeakLearner,
+    spec: LearnerSpec,
+    X: jax.Array,  # [n, d] pooled
+    y: jax.Array,
+    T: int,
+    key: jax.Array,
+) -> Ensemble:
+    mask = jnp.ones(y.shape, jnp.float32)
+    state = init_boost_state(learner, spec, T, mask[None, :], key)
+    Xc, yc, mc = X[None], y[None], mask[None]
+
+    def round_(state, _):
+        state, m = adaboost_f_round(learner, spec, state, Xc, yc, mc)
+        return state, m
+
+    state, _ = jax.lax.scan(round_, state, None, length=T)
+    return state.ensemble
+
+
+ROUND_FNS: Dict[str, Callable] = {
+    "adaboost_f": adaboost_f_round,
+    "distboost_f": distboost_f_round,
+    "bagging": bagging_round,
+}

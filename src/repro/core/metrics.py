@@ -1,0 +1,28 @@
+"""Classification metrics (macro-F1 matches the paper's Table 1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def confusion_matrix(y_true: jax.Array, y_pred: jax.Array, n_classes: int) -> jax.Array:
+    idx = y_true * n_classes + y_pred
+    cm = jnp.bincount(idx, length=n_classes * n_classes)
+    return cm.reshape(n_classes, n_classes).astype(jnp.float32)
+
+
+def f1_macro(y_true: jax.Array, y_pred: jax.Array, n_classes: int) -> jax.Array:
+    cm = confusion_matrix(y_true, y_pred, n_classes)
+    tp = jnp.diag(cm)
+    fp = jnp.sum(cm, axis=0) - tp
+    fn = jnp.sum(cm, axis=1) - tp
+    precision = tp / jnp.maximum(tp + fp, 1e-12)
+    recall = tp / jnp.maximum(tp + fn, 1e-12)
+    f1 = 2 * precision * recall / jnp.maximum(precision + recall, 1e-12)
+    # Macro over classes PRESENT in y_true (sklearn-style labels handling)
+    present = (jnp.sum(cm, axis=1) > 0).astype(jnp.float32)
+    return jnp.sum(f1 * present) / jnp.maximum(jnp.sum(present), 1.0)
+
+
+def accuracy(y_true: jax.Array, y_pred: jax.Array) -> jax.Array:
+    return jnp.mean((y_true == y_pred).astype(jnp.float32))

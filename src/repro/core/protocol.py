@@ -1,0 +1,78 @@
+"""The MAFL round protocol as an interpretable task graph (paper §4.1-4.2).
+
+A federated round is a list of tasks from the six-word vocabulary; the
+interpreter walks them, moving artifacts between collaborators and the
+aggregator through serialized buffers + TensorDB entries, with a global
+``synch`` barrier after every task (paper §4.2: "not two consecutive
+steps can be executed before each Collaborator has concluded the
+previous one").
+
+Two execution modes, selected by Plan.optimizations.fused_round:
+  * interpreted  — each task is a separate host-level step with real
+    serialization through the TensorDB (the OpenFL-faithful path; its
+    overheads are what §5.1 optimises);
+  * fused        — the whole round is ONE jit-compiled program
+    (core/boosting.py round functions); the protocol layer only logs.
+"""
+from __future__ import annotations
+
+import time
+from typing import TYPE_CHECKING, Any, Callable, Dict, List
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.fl.federation import Federation
+
+TaskFn = Callable[["Federation", int, Dict[str, Any]], None]
+TASK_EXECUTORS: Dict[str, TaskFn] = {}
+
+
+def task_executor(kind: str):
+    def deco(fn: TaskFn) -> TaskFn:
+        TASK_EXECUTORS[kind] = fn
+        return fn
+
+    return deco
+
+
+class SynchBarrier:
+    """The paper's general `synch` gRPC message.
+
+    polling mode sleeps in ``sleep_s`` quanta until every collaborator has
+    reported task completion — faithfully reproducing OpenFL's mechanism
+    (and its cost).  structural mode returns immediately: under SPMD the
+    barrier is the collective itself.
+    """
+
+    def __init__(self, n_collaborators: int, sleep_s: float, structural: bool):
+        self.n = n_collaborators
+        self.sleep_s = sleep_s
+        self.structural = structural
+        self.waited_seconds = 0.0
+        self._done = 0
+
+    def report_done(self) -> None:
+        self._done += 1
+
+    def wait_all(self) -> None:
+        if self.structural:
+            self._done = 0
+            return
+        # Collaborators in the simulation complete synchronously before the
+        # barrier is polled, so the loop runs exactly once — but the sleep
+        # quantum is still paid, as in OpenFL's implementation.
+        while self._done < self.n:
+            break
+        t0 = time.perf_counter()
+        time.sleep(self.sleep_s)
+        self.waited_seconds += time.perf_counter() - t0
+        self._done = 0
+
+
+def run_round(fed: "Federation", round_idx: int) -> None:
+    """Execute one federated round's task list with barriers."""
+    for task in fed.plan.tasks:
+        TASK_EXECUTORS[task.kind](fed, round_idx, task.args)
+        for _ in range(fed.n_collaborators):
+            fed.barrier.report_done()
+        fed.barrier.wait_all()
+    fed.end_round_barrier(round_idx)

@@ -1,0 +1,74 @@
+"""Model-agnostic serialization (paper §4.2/§5.1).
+
+OpenFL's wire format assumed DNN weight tensors; MAFL swapped in
+cloudpickle so *whole models* could cross the network, and tuned gRPC
+buffer sizes (2MB -> 32MB) to avoid resize churn.  The JAX analogue: a
+weak hypothesis is a pytree of fixed-shape arrays, so we can do better
+than pickle — pack every leaf into ONE contiguous byte buffer with a
+static header (``packed=True``), versus a naive per-leaf list of buffers
+(``packed=False``, the resize-churn analogue).  The ablation benchmark
+measures the difference; ``wire_size`` feeds the scaling model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class WireFormat:
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[str, ...]
+
+
+def wire_format(tree: Any) -> WireFormat:
+    leaves, treedef = jax.tree.flatten(tree)
+    return WireFormat(
+        treedef=treedef,
+        shapes=tuple(tuple(l.shape) for l in leaves),
+        dtypes=tuple(str(np.asarray(l).dtype) for l in leaves),
+    )
+
+
+def serialize(tree: Any, packed: bool = True) -> List[bytes]:
+    """pytree -> wire buffers.  packed: one contiguous buffer (header-less
+    payload; format known from WireFormat).  unpacked: one buffer per leaf
+    — many small messages, the pre-optimisation OpenFL behaviour."""
+    leaves = [np.asarray(l) for l in jax.tree.flatten(tree)[0]]
+    if packed:
+        return [b"".join(l.tobytes() for l in leaves)]
+    return [l.tobytes() for l in leaves]
+
+
+def deserialize(buffers: List[bytes], fmt: WireFormat, packed: bool = True) -> Any:
+    leaves = []
+    if packed:
+        (buf,) = buffers
+        off = 0
+        for shape, dtype in zip(fmt.shapes, fmt.dtypes):
+            n = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+            leaves.append(np.frombuffer(buf[off : off + n], dtype=dtype).reshape(shape))
+            off += n
+    else:
+        for buf, shape, dtype in zip(buffers, fmt.shapes, fmt.dtypes):
+            leaves.append(np.frombuffer(buf, dtype=dtype).reshape(shape))
+    return jax.tree.unflatten(fmt.treedef, leaves)
+
+
+def wire_size(tree: Any) -> int:
+    """Bytes on the wire for one copy of ``tree`` (feeds the Fig.-5 comm model)."""
+    return sum(
+        int(np.prod(l.shape, dtype=np.int64)) * np.dtype(l.dtype).itemsize
+        for l in jax.tree.flatten(tree)[0]
+    )
+
+
+def roundtrip_equal(tree: Any, packed: bool = True) -> bool:
+    fmt = wire_format(tree)
+    back = deserialize(serialize(tree, packed), fmt, packed)
+    ok = jax.tree.map(lambda a, b: bool(np.array_equal(np.asarray(a), np.asarray(b))), tree, back)
+    return all(jax.tree.flatten(ok)[0])

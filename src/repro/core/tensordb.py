@@ -1,0 +1,78 @@
+"""TensorDB — MAFL's round-indexed model/metric store (paper §4.3).
+
+OpenFL's TensorDB is a pandas frame keyed by (name, round, tags, origin)
+whose query time grows linearly with rounds; the paper's fix bounds it to
+the last two rounds.  We reproduce both behaviours (``retention=None``
+vs. ``retention=k``) so the ablation benchmark can measure the gap, and
+extend the key set so whole-model pytrees (not just tensors) are storable
+— the model-agnostic requirement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorKey:
+    name: str  # e.g. "weak_hypothesis", "adaboost_coeff", "metric/f1"
+    origin: str  # "aggregator" | "collaborator_<i>"
+    round: int
+    tags: Tuple[str, ...] = ()
+
+
+class TensorDB:
+    def __init__(self, retention: Optional[int] = None):
+        self._store: Dict[TensorKey, Any] = {}
+        self.retention = retention
+        self.query_seconds = 0.0  # accounting for the ablation benchmark
+        self.peak_entries = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def put(self, key: TensorKey, value: Any) -> None:
+        self._store[key] = value
+        self.peak_entries = max(self.peak_entries, len(self._store))
+        if self.retention is not None:
+            self.clean_up(key.round)
+
+    def get(self, key: TensorKey) -> Any:
+        t0 = time.perf_counter()
+        try:
+            return self._store[key]
+        finally:
+            self.query_seconds += time.perf_counter() - t0
+
+    def query(
+        self,
+        name: Optional[str] = None,
+        origin: Optional[str] = None,
+        round: Optional[int] = None,
+        tags: Optional[Tuple[str, ...]] = None,
+    ) -> List[Tuple[TensorKey, Any]]:
+        """Linear scan — deliberately mirrors the pandas-frame behaviour so
+        unbounded retention visibly degrades query time."""
+        t0 = time.perf_counter()
+        out = []
+        for k, v in self._store.items():
+            if name is not None and k.name != name:
+                continue
+            if origin is not None and k.origin != origin:
+                continue
+            if round is not None and k.round != round:
+                continue
+            if tags is not None and k.tags != tags:
+                continue
+            out.append((k, v))
+        self.query_seconds += time.perf_counter() - t0
+        return out
+
+    def clean_up(self, current_round: int) -> None:
+        """Drop everything older than ``retention`` rounds (paper's fix:
+        'store only the essential information of the last two rounds')."""
+        if self.retention is None:
+            return
+        cutoff = current_round - self.retention + 1
+        self._store = {k: v for k, v in self._store.items() if k.round >= cutoff}

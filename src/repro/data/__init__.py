@@ -1,0 +1,3 @@
+from repro.data.synthetic import PAPER_DATASETS, DatasetSpec, get_dataset, make_classification
+
+__all__ = ["PAPER_DATASETS", "DatasetSpec", "get_dataset", "make_classification"]

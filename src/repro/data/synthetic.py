@@ -1,0 +1,86 @@
+"""Synthetic analogues of the paper's ten evaluation datasets (Table 1).
+
+The UCI datasets are not available offline, so each is replaced by a
+generator matched in (n_samples, n_features, n_classes) and rough
+difficulty (cluster separation / label noise chosen so a depth-4
+oblivious tree is a *weak* learner on it, as a 10-leaf tree is on the
+originals).  Generation: Gaussian class clusters on a random low-rank
+manifold + rotation + feature noise + label flips — the standard
+"make_classification" recipe, built here on jax.random.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetSpec:
+    name: str
+    n_train: int
+    n_test: int
+    n_features: int
+    n_classes: int
+    n_clusters_per_class: int = 2
+    class_sep: float = 1.2
+    label_noise: float = 0.05
+
+
+# (n_train, n_test, d, K) matched to the paper's description: binary
+# adult/forestcover/kr-vs-kp; splice=3, vehicle=4, segmentation=7, sat=8
+# (paper table value), pendigits=10, vowel=11, letter=26; sample counts
+# follow the real datasets, capped at 50k train for the CPU container
+# (the cap is recorded in EXPERIMENTS.md; shapes stay faithful otherwise).
+PAPER_DATASETS: Dict[str, DatasetSpec] = {
+    "adult": DatasetSpec("adult", 32561, 16281, 14, 2, class_sep=1.0, label_noise=0.12),
+    "forestcover": DatasetSpec("forestcover", 50000, 10000, 54, 2, class_sep=0.9, label_noise=0.10),
+    "kr-vs-kp": DatasetSpec("kr-vs-kp", 2557, 639, 36, 2, class_sep=1.8, label_noise=0.01),
+    "splice": DatasetSpec("splice", 2552, 638, 61, 3, class_sep=1.4, label_noise=0.03),
+    "vehicle": DatasetSpec("vehicle", 677, 169, 18, 4, class_sep=1.1, label_noise=0.05),
+    "segmentation": DatasetSpec("segmentation", 209, 2101, 19, 7, class_sep=1.5, label_noise=0.02),
+    "sat": DatasetSpec("sat", 4435, 2000, 36, 8, class_sep=1.2, label_noise=0.04),
+    "pendigits": DatasetSpec("pendigits", 7494, 3498, 16, 10, class_sep=1.4, label_noise=0.02),
+    "vowel": DatasetSpec("vowel", 792, 198, 10, 11, class_sep=1.0, label_noise=0.05),
+    "letter": DatasetSpec("letter", 16000, 4000, 16, 26, class_sep=1.0, label_noise=0.03),
+}
+
+
+def make_classification(
+    spec: DatasetSpec, key: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Returns (X_train, y_train, X_test, y_test), features standardized."""
+    n = spec.n_train + spec.n_test
+    K, d, Q = spec.n_classes, spec.n_features, spec.n_clusters_per_class
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+
+    informative = max(2, min(d, int(np.ceil(np.log2(K * Q))) + 3))
+    centers = jax.random.normal(k1, (K * Q, informative)) * spec.class_sep * 2.0
+
+    y = jax.random.randint(k2, (n,), 0, K)
+    cluster = y * Q + jax.random.randint(k3, (n,), 0, Q)
+    Xi = centers[cluster] + jax.random.normal(k4, (n, informative))
+
+    # Embed into d dims with a random linear map (adds redundant features),
+    # then add per-feature noise.
+    A = jax.random.normal(k5, (informative, d)) / jnp.sqrt(informative)
+    X = Xi @ A + 0.1 * jax.random.normal(k6, (n, d))
+
+    # Label noise
+    kf1, kf2 = jax.random.split(k6)
+    flip = jax.random.bernoulli(kf1, spec.label_noise, (n,))
+    y = jnp.where(flip, jax.random.randint(kf2, (n,), 0, K), y).astype(jnp.int32)
+
+    # Standardize with train statistics
+    Xtr, Xte = X[: spec.n_train], X[spec.n_train :]
+    mu, sd = jnp.mean(Xtr, axis=0), jnp.std(Xtr, axis=0) + 1e-6
+    return (Xtr - mu) / sd, y[: spec.n_train], (Xte - mu) / sd, y[spec.n_train :]
+
+
+def get_dataset(name: str, key: jax.Array):
+    if name not in PAPER_DATASETS:
+        raise KeyError(f"unknown dataset {name!r}; have {sorted(PAPER_DATASETS)}")
+    return PAPER_DATASETS[name], make_classification(PAPER_DATASETS[name], key)

@@ -1,0 +1,1 @@
+"""Federated runtime: simulation (federation.py) + SPMD (sharded.py)."""

@@ -1,0 +1,283 @@
+"""The MAFL federation runtime — Aggregator, Collaborators, Director/Envoy
+(paper §4.3), driven by the Plan's task graph (core/protocol.py).
+
+This is the OpenFL-faithful *simulation* layer: artifacts really travel
+through serialized buffers and TensorDB entries, barriers really poll,
+and every optimisation of paper §5.1 is a toggle — so the Fig.-3 ablation
+is measurable.  The SPMD production path lives in fl/sharded.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import boosting, protocol
+from repro.core.aggregation import fedavg
+from repro.core.metrics import f1_macro
+from repro.core.plan import Plan
+from repro.core.serialization import deserialize, serialize, wire_format, wire_size
+from repro.core.tensordb import TensorDB, TensorKey
+from repro.learners.base import LearnerSpec, get_learner
+
+
+@dataclasses.dataclass
+class Collaborator:
+    idx: int
+    X: jax.Array  # [n, d]
+    y: jax.Array  # [n]
+    mask: jax.Array  # [n]
+    weights: jax.Array  # [n] raw AdaBoost sample weights
+    db: TensorDB
+    params: Any = None  # current local model (FedAvg workflow)
+
+    @property
+    def origin(self) -> str:
+        return f"collaborator_{self.idx}"
+
+
+@dataclasses.dataclass
+class Aggregator:
+    db: TensorDB
+    ensemble: List[Any] = dataclasses.field(default_factory=list)  # [(params, alpha)]
+    global_params: Any = None  # FedAvg workflow
+
+
+class Federation:
+    """Instantiated by ``Director.start_experiment`` from a Plan (the
+    long-lived Director/Envoy pair of OpenFL reduces to this factory in a
+    single-process simulation)."""
+
+    def __init__(self, plan: Plan, Xs, ys, masks, X_test, y_test, spec: LearnerSpec, key):
+        plan.validate()
+        self.plan = plan
+        self.learner = get_learner(spec.name)
+        self.spec = spec
+        self.key = key
+        self.X_test, self.y_test = X_test, y_test
+        opt = plan.optimizations
+        retention = opt.tensordb_retention if opt.bounded_tensordb else None
+        self.aggregator = Aggregator(db=TensorDB(retention))
+        self.collaborators = [
+            Collaborator(
+                idx=i,
+                X=Xs[i],
+                y=ys[i],
+                mask=masks[i],
+                weights=masks[i] / jnp.maximum(jnp.sum(masks), 1.0),
+                db=TensorDB(retention),
+            )
+            for i in range(Xs.shape[0])
+        ]
+        self.n_collaborators = len(self.collaborators)
+        self.barrier = protocol.SynchBarrier(
+            self.n_collaborators,
+            sleep_s=plan.collaborator.sleep_s,
+            structural=opt.fast_barrier,
+        )
+        self.end_round_sleep_s = 0.0 if opt.fast_barrier else max(plan.aggregator.sleep_s * 10, 0.1)
+        self.comm_bytes = 0
+        self.history: List[Dict[str, float]] = []
+        self._round_scratch: Dict[str, Any] = {}
+        self._fused_state: Optional[boosting.BoostState] = None
+        self._fused_round_fn = None
+        self._wire_fmt = None
+
+    # -- communication accounting -----------------------------------------
+    def send(self, tree: Any) -> List[bytes]:
+        bufs = serialize(tree, packed=self.plan.optimizations.packed_serialization)
+        self.comm_bytes += sum(len(b) for b in bufs)
+        return bufs
+
+    def recv(self, bufs: List[bytes], fmt) -> Any:
+        return deserialize(bufs, fmt, packed=self.plan.optimizations.packed_serialization)
+
+    def end_round_barrier(self, round_idx: int) -> None:
+        if self.end_round_sleep_s:
+            time.sleep(self.end_round_sleep_s)
+
+    # -- main loop ---------------------------------------------------------
+    def run(self, rounds: Optional[int] = None, eval_every: int = 1) -> List[Dict[str, float]]:
+        rounds = rounds or self.plan.aggregator.rounds
+        if self.plan.optimizations.fused_round and self.plan.algorithm != "fedavg":
+            return self._run_fused(rounds, eval_every)
+        self._eval_every = eval_every
+        for r in range(rounds):
+            protocol.run_round(self, r)
+        return self.history
+
+    # -- fused fast path: the whole round as one jitted program ------------
+    def _run_fused(self, rounds: int, eval_every: int) -> List[Dict[str, float]]:
+        Xs = jnp.stack([c.X for c in self.collaborators])
+        ys = jnp.stack([c.y for c in self.collaborators])
+        masks = jnp.stack([c.mask for c in self.collaborators])
+        committee = self.n_collaborators if self.plan.algorithm == "distboost_f" else None
+        state = boosting.init_boost_state(
+            self.learner, self.spec, rounds, masks, self.key, committee_size=committee
+        )
+        if self.plan.algorithm == "preweak_f":
+            setup = jax.jit(
+                lambda s, X, y, m: boosting.preweak_f_setup(
+                    self.learner, self.spec, s, X, y, m, rounds
+                )
+            )
+            hyp_space, state = setup(state, Xs, ys, masks)
+            round_fn = jax.jit(
+                lambda s, X, y, m: boosting.preweak_f_round(
+                    self.learner, self.spec, s, hyp_space, X, y, m
+                )
+            )
+        else:
+            base = boosting.ROUND_FNS[self.plan.algorithm]
+            round_fn = jax.jit(lambda s, X, y, m: base(self.learner, self.spec, s, X, y, m))
+        committee_pred = self.plan.algorithm == "distboost_f"
+        predict = jax.jit(
+            lambda ens, X: boosting.strong_predict(
+                self.learner, self.spec, ens, X, committee=committee_pred
+            )
+        )
+        for r in range(rounds):
+            state, metrics = round_fn(state, Xs, ys, masks)
+            if (r + 1) % eval_every == 0 or r == rounds - 1:
+                f1 = f1_macro(self.y_test, predict(state.ensemble, self.X_test), self.spec.n_classes)
+                self.history.append(
+                    {"round": r, "f1": float(f1), **{k: float(v) for k, v in metrics.items()}}
+                )
+        self._fused_state = state
+        return self.history
+
+    # -- ensemble as used by the interpreted path --------------------------
+    def strong_predict_host(self, X) -> jax.Array:
+        if not self.aggregator.ensemble:
+            return jnp.zeros(X.shape[0], jnp.int32)
+        votes = jnp.zeros((X.shape[0], self.spec.n_classes))
+        for params, alpha in self.aggregator.ensemble:
+            pred = self.learner.predict(self.spec, params, X)
+            votes = votes + alpha * jax.nn.one_hot(pred, self.spec.n_classes)
+        return jnp.argmax(votes, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Task executors (interpreted mode) — the paper's §4.1 task vocabulary
+# ---------------------------------------------------------------------------
+
+
+@protocol.task_executor("train")
+def _train(fed: Federation, r: int, args: Dict[str, Any]) -> None:
+    if fed.plan.algorithm == "fedavg":
+        _fedavg_train(fed, r)
+        return
+    for c in fed.collaborators:
+        # local fit on AdaBoost weights (scaled locally so scale-sensitive
+        # learners keep their regularisation semantics)
+        wsum = jnp.maximum(jnp.sum(c.weights), 1e-30)
+        w_fit = c.weights / wsum * jnp.maximum(jnp.sum(c.mask), 1.0)
+        fed.key, kfit = jax.random.split(fed.key)
+        params = fed.learner.fit(fed.spec, None, c.X, c.y, w_fit, kfit)
+        if fed._wire_fmt is None:
+            fed._wire_fmt = wire_format(params)
+        bufs = fed.send(params)  # collaborator -> aggregator
+        fed.aggregator.db.put(TensorKey("weak_hypothesis", c.origin, r), bufs)
+
+
+@protocol.task_executor("weak_learners_validate")
+def _weak_learners_validate(fed: Federation, r: int, args: Dict[str, Any]) -> None:
+    # aggregator broadcasts the whole hypothesis space to every collaborator
+    entries = fed.aggregator.db.query(name="weak_hypothesis", round=r)
+    entries.sort(key=lambda kv: kv[0].origin)
+    hyps = [fed.recv(bufs, fed._wire_fmt) for _, bufs in entries]
+    fed.comm_bytes += sum(sum(len(b) for b in bufs) for _, bufs in entries) * (
+        fed.n_collaborators - 1
+    )  # n-1 extra copies on the wire
+    errs = np.zeros((fed.n_collaborators, len(hyps)))
+    norms = np.zeros(fed.n_collaborators)
+    for i, c in enumerate(fed.collaborators):
+        for j, h in enumerate(hyps):
+            mis = (fed.learner.predict(fed.spec, h, c.X) != c.y).astype(jnp.float32)
+            errs[i, j] = float(jnp.sum(c.weights * mis * c.mask))
+        norms[i] = float(jnp.sum(c.weights * c.mask))
+        c.db.put(TensorKey("misprediction", c.origin, r), None)
+    fed._round_scratch = {"errs": errs, "norms": norms, "hyps": hyps}
+    fed.aggregator.db.put(TensorKey("error_matrix", "aggregator", r), errs)
+
+
+@protocol.task_executor("adaboost_update")
+def _adaboost_update(fed: Federation, r: int, args: Dict[str, Any]) -> None:
+    errs = fed._round_scratch["errs"]
+    norms = fed._round_scratch["norms"]
+    hyps = fed._round_scratch["hyps"]
+    eps = errs.sum(axis=0) / max(norms.sum(), 1e-30)
+    c_idx = int(np.argmin(eps))
+    e = float(np.clip(eps[c_idx], 1e-10, 1 - 1e-10))
+    alpha = float(np.clip(np.log((1 - e) / e) + np.log(fed.spec.n_classes - 1.0), -10, 10))
+    chosen = hyps[c_idx]
+    fed.aggregator.ensemble.append((chosen, alpha))
+    fed.aggregator.db.put(TensorKey("adaboost_coeff", "aggregator", r), alpha)
+    # broadcast (chosen hypothesis, alpha); collaborators update weights
+    fed.comm_bytes += (wire_size(chosen) + 8) * fed.n_collaborators
+    total = 0.0
+    for c in fed.collaborators:
+        mis = (fed.learner.predict(fed.spec, chosen, c.X) != c.y).astype(jnp.float32)
+        c.weights = c.weights * jnp.exp(alpha * mis) * c.mask
+        total += float(jnp.sum(c.weights))
+    for c in fed.collaborators:  # global renormalisation via norm exchange
+        c.weights = c.weights / max(total, 1e-30)
+
+
+@protocol.task_executor("adaboost_validate")
+def _adaboost_validate(fed: Federation, r: int, args: Dict[str, Any]) -> None:
+    if (r + 1) % getattr(fed, "_eval_every", 1) and r != fed.plan.aggregator.rounds - 1:
+        return
+    pred = fed.strong_predict_host(fed.X_test)
+    f1 = float(f1_macro(fed.y_test, pred, fed.spec.n_classes))
+    last = fed.aggregator.ensemble[-1] if fed.aggregator.ensemble else (None, 0.0)
+    fed.history.append({"round": r, "f1": f1, "alpha": last[1]})
+    fed.aggregator.db.put(TensorKey("metric/f1", "aggregator", r), f1)
+
+
+# -- OpenFL's original DNN workflow (FedAvg over warm-started learners) ----
+
+
+def _fedavg_train(fed: Federation, r: int) -> None:
+    if fed.learner.warm_fit is None:
+        raise ValueError(f"learner {fed.spec.name!r} has no warm_fit; FedAvg needs one")
+    if fed.aggregator.global_params is None:
+        fed.key, k0 = jax.random.split(fed.key)
+        fed.aggregator.global_params = fed.learner.init(fed.spec, k0)
+    locals_, sizes = [], []
+    for c in fed.collaborators:
+        fed.key, kt = jax.random.split(fed.key)
+        fed.comm_bytes += wire_size(fed.aggregator.global_params)  # broadcast
+        p = fed.learner.warm_fit(fed.spec, fed.aggregator.global_params, c.X, c.y, c.mask, kt)
+        c.params = p
+        fed.comm_bytes += wire_size(p)  # upload
+        locals_.append(p)
+        sizes.append(float(jnp.sum(c.mask)))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *locals_)
+    fed.aggregator.global_params = fedavg(stacked, jnp.asarray(sizes))
+
+
+@protocol.task_executor("aggregated_model_validation")
+def _agg_model_validation(fed: Federation, r: int, args) -> None:
+    if fed.aggregator.global_params is None:
+        return
+    pred = fed.learner.predict(fed.spec, fed.aggregator.global_params, fed.X_test)
+    fed.history.append(
+        {"round": r, "f1": float(f1_macro(fed.y_test, pred, fed.spec.n_classes)), "alpha": 0.0}
+    )
+
+
+@protocol.task_executor("locally_tuned_model_validation")
+def _local_model_validation(fed: Federation, r: int, args) -> None:
+    for c in fed.collaborators:
+        if c.params is None:
+            continue
+        pred = fed.learner.predict(fed.spec, c.params, c.X)
+        c.db.put(
+            TensorKey("metric/local_f1", c.origin, r),
+            float(f1_macro(c.y, pred, fed.spec.n_classes)),
+        )

@@ -1,0 +1,138 @@
+"""Pallas TPU flash attention (blockwise online-softmax) with the extras
+the assigned architectures need: GQA/MQA head grouping, causal masking,
+sliding windows (gemma2 local layers, llama4 chunk analogue) and logit
+soft-capping (gemma2, grok).
+
+Grid: (batch, q_head, q_block, kv_block) — kv innermost so the running
+(m, l, acc) scratch tiles stay VMEM-resident per query block.  K/V block
+index maps divide the query head by the GQA group size, so grouped heads
+re-read the same KV tiles (no host-side repeat).
+
+Block defaults (q=512, kv=512, D<=256) keep the working set
+(q + k + v + p + acc) under ~6 MB of VMEM in bf16/f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, window: int | None, softcap: float | None,
+    block_q: int, block_k: int, q_offset: int, kv_len: int, n_kv: int,
+):
+    qi, ki = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # [bq, D]
+    k = k_ref[0, 0].astype(jnp.float32)  # [bk, D]
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [bq, bk]
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) + q_offset
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < kv_len  # exclude padded KV columns
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    logits = jnp.where(mask, logits, _NEG)
+
+    m_prev = m_scr[...][:, 0]  # [bq]
+    l_prev = l_scr[...][:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+    p = jnp.where(mask, jnp.exp(logits - m_new[:, None]), 0.0)  # [bq, bk]
+    corr = jnp.exp(m_prev - m_new)
+    l_new = corr * l_prev + jnp.sum(p, axis=1)
+    v = v_ref[0, 0].astype(jnp.float32)  # [bk, D]
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new[:, None]
+    l_scr[...] = l_new[:, None]
+
+    @pl.when(ki == n_kv - 1)
+    def _fin():
+        l = jnp.maximum(l_scr[...][:, 0], 1e-30)
+        o_ref[0, 0, ...] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # [B, H, S, D]
+    k: jax.Array,  # [B, Hkv, T, D]
+    v: jax.Array,  # [B, Hkv, T, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Oracle: kernels/ref.py::attention_ref.  Supports S < T (chunked
+    prefill against a longer KV cache): query absolute position is
+    offset by T - S so the causal diagonal lines up."""
+    B, H, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    assert H % Hkv == 0, (H, Hkv)
+    g = H // Hkv
+    scale = float(scale) if scale is not None else float(1.0 / (D**0.5))
+
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    nq, nk = -(-S // block_q), -(-T // block_k)
+    Sp, Tp = nq * block_q, nk * block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+
+    kernel = functools.partial(
+        _kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        block_q=block_q,
+        block_k=block_k,
+        q_offset=T - S,
+        kv_len=T,
+        n_kv=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, qi, ki: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, qi, ki: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :S, :]

@@ -1,0 +1,48 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Each op dispatches kernel vs. pure-jnp oracle:
+  * ``use_pallas=True``  — the Pallas kernel; on CPU backends it runs in
+    interpret mode (the TPU lowering is the deployment target);
+  * ``use_pallas=False`` — the ref.py oracle (used by the dry-run so the
+    roofline reads real XLA HLO, and as the correctness ground truth).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.boost_update import weight_update as _weight_update
+from repro.kernels.boost_update import weighted_errors as _weighted_errors
+from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.tree_hist import tree_hist as _tree_hist
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def tree_hist(bin_idx, leaf, wy, *, n_leaves, n_bins_p1, use_pallas=False, **kw):
+    if use_pallas:
+        return _tree_hist(
+            bin_idx, leaf, wy, n_leaves=n_leaves, n_bins_p1=n_bins_p1,
+            interpret=_interpret(), **kw,
+        )
+    return ref.tree_hist_ref(bin_idx, leaf, wy, n_leaves, n_bins_p1)
+
+
+def weighted_errors(preds, y, w, *, use_pallas=False, **kw):
+    if use_pallas:
+        return _weighted_errors(preds, y, w, interpret=_interpret(), **kw)
+    return ref.weighted_errors_ref(preds, y, w)
+
+
+def weight_update(w, mis, mask, alpha, *, use_pallas=False, **kw):
+    if use_pallas:
+        return _weight_update(w, mis, mask, alpha, interpret=_interpret(), **kw)
+    return ref.boost_weight_update_ref(w, mis, mask, alpha)
+
+
+def attention(q, k, v, *, use_pallas=False, **kw):
+    if use_pallas:
+        return _flash_attention(q, k, v, interpret=_interpret(), **kw)
+    return ref.attention_ref(q, k, v, **kw)

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth: kernels are swept against
+these in tests/test_kernels.py (shapes x dtypes, interpret=True on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_hist_ref(
+    bin_idx: jax.Array,  # [n, d] i32 in [0, n_bins]
+    leaf: jax.Array,  # [n] i32 in [0, n_leaves)
+    wy: jax.Array,  # [n, K] f32 weighted one-hot labels
+    n_leaves: int,
+    n_bins_p1: int,
+) -> jax.Array:
+    """Weighted class histogram C[L, d, B+1, K] (tree split hot-spot)."""
+    n, d = bin_idx.shape
+    k = wy.shape[1]
+    seg = (leaf[:, None] * d + jnp.arange(d)[None, :]) * n_bins_p1 + bin_idx
+    flat = jax.ops.segment_sum(
+        jnp.broadcast_to(wy[:, None, :], (n, d, k)).reshape(n * d, k),
+        seg.reshape(n * d),
+        num_segments=n_leaves * d * n_bins_p1,
+    )
+    return flat.reshape(n_leaves, d, n_bins_p1, k)
+
+
+def weighted_errors_ref(
+    preds: jax.Array,  # [H, n] i32 — every hypothesis's prediction
+    y: jax.Array,  # [n] i32
+    w: jax.Array,  # [n] f32 (mask folded in)
+) -> jax.Array:
+    """eps[h] = sum_n w_n * 1[preds[h, n] != y_n]  (AdaBoost.F step 3)."""
+    mis = (preds != y[None, :]).astype(w.dtype)
+    return mis @ w
+
+
+def boost_weight_update_ref(
+    w: jax.Array,  # [n] f32
+    mis: jax.Array,  # [n] f32 — 1[chosen mispredicts]
+    mask: jax.Array,  # [n] f32
+    alpha: jax.Array,  # scalar
+) -> jax.Array:
+    """w * exp(alpha * mis) * mask (renormalisation happens globally)."""
+    return w * jnp.exp(alpha * mis) * mask
+
+
+def attention_ref(
+    q: jax.Array,  # [B, H, S, D]
+    k: jax.Array,  # [B, Hkv, T, D]
+    v: jax.Array,  # [B, Hkv, T, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,  # sliding-window size (None = full)
+    softcap: float | None = None,  # gemma2-style logit soft-capping
+    scale: float | None = None,
+) -> jax.Array:
+    """Grouped-query attention oracle, f32 accumulation."""
+    B, H, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    assert H % Hkv == 0
+    g = H // Hkv
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * scale
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    kf = jnp.repeat(kf, g, axis=1)
+    vf = jnp.repeat(vf, g, axis=1)
+    logits = jnp.einsum("bhsd,bhtd->bhst", qf, kf)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    i = jnp.arange(S)[:, None] + (T - S)  # query absolute position
+    j = jnp.arange(T)[None, :]
+    m = jnp.ones((S, T), bool)
+    if causal:
+        m &= j <= i
+    if window is not None:
+        m &= (i - j) < window
+    logits = jnp.where(m[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, vf).astype(q.dtype)

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: weighted class-histogram accumulation — the
+compute hot-spot of oblivious-tree fitting (learners/tree.py).
+
+GPU gradient-boosting libraries implement this as atomic scatter-adds in
+shared memory.  TPUs have no atomics; the TPU-native formulation turns
+the scatter into a **one-hot matmul** that runs on the MXU:
+
+    for each feature f in the block:
+        C[f] += onehot(leaf * (B+1) + bin[:, f]).T  @  wy      # [M, S] @ [S, K]
+
+with M = n_leaves * (B+1) combined (leaf, bin) buckets.  The grid walks
+(feature blocks) x (sample blocks); the sample axis is innermost so each
+output tile stays resident in VMEM while samples stream through.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(bin_ref, leaf_ref, wy_ref, out_ref, *, n_leaves: int, n_bins_p1: int):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bins = bin_ref[...]  # [S, dblk] i32
+    leaf = leaf_ref[...]  # [S] i32
+    wy = wy_ref[...].astype(jnp.float32)  # [S, K]
+
+    M = n_leaves * n_bins_p1
+    idx = leaf[:, None] * n_bins_p1 + bins  # [S, dblk]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], idx.shape[1], M), 2)
+    onehot = (idx[:, :, None] == iota).astype(jnp.float32)  # [S, dblk, M]
+    # [dblk, M, S] @ [S, K]  -> MXU matmuls, one per feature in the block
+    contrib = jnp.einsum(
+        "sdm,sk->dmk", onehot, wy, preferred_element_type=jnp.float32
+    )
+    out_ref[...] += contrib
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_leaves", "n_bins_p1", "block_s", "block_d", "interpret")
+)
+def tree_hist(
+    bin_idx: jax.Array,  # [n, d] i32 in [0, n_bins]
+    leaf: jax.Array,  # [n] i32
+    wy: jax.Array,  # [n, K] f32
+    *,
+    n_leaves: int,
+    n_bins_p1: int,
+    block_s: int = 512,
+    block_d: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns C[L, d, B+1, K]; oracle: kernels/ref.py::tree_hist_ref."""
+    n, d = bin_idx.shape
+    K = wy.shape[1]
+    block_s = min(block_s, n)
+    block_d = min(block_d, d)
+
+    # Pad to block multiples; padded samples get leaf 0 / weight 0 (no-ops),
+    # padded features land in extra feature rows that are sliced off below.
+    ns = -(-n // block_s)
+    nd = -(-d // block_d)
+    n_pad, d_pad = ns * block_s, nd * block_d
+    bin_idx = jnp.pad(bin_idx, ((0, n_pad - n), (0, d_pad - d)))
+    leaf = jnp.pad(leaf, (0, n_pad - n))
+    wy = jnp.pad(wy, ((0, n_pad - n), (0, 0)))
+
+    M = n_leaves * n_bins_p1
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_leaves=n_leaves, n_bins_p1=n_bins_p1),
+        grid=(nd, ns),
+        in_specs=[
+            pl.BlockSpec((block_s, block_d), lambda di, si: (si, di)),
+            pl.BlockSpec((block_s,), lambda di, si: (si,)),
+            pl.BlockSpec((block_s, K), lambda di, si: (si, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_d, M, K), lambda di, si: (di, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d_pad, M, K), jnp.float32),
+        interpret=interpret,
+    )(bin_idx, leaf, wy)
+    # [d, L*(B+1), K] -> [L, d, B+1, K]
+    return out[:d].reshape(d, n_leaves, n_bins_p1, K).transpose(1, 0, 2, 3)

@@ -1,0 +1,1 @@
+"""Launchers: mesh/dryrun (production), train/serve/fl_run (host)."""

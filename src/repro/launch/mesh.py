@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) — 256 chips of TPU v5e.
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the ``pod`` axis is
+the federation axis (DESIGN.md §5): params replicate across pods,
+MAFL aggregation collectives cross it.
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS first).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh for CPU smoke runs of the same code paths."""
+    return jax.make_mesh((1, 1), ("data", "model"))

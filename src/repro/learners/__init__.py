@@ -1,0 +1,17 @@
+"""Fixed-shape, jit-able weak learners (one per family from paper §5.3)."""
+from repro.learners.base import (
+    LearnerSpec,
+    WeakLearner,
+    available_learners,
+    get_learner,
+    register,
+)
+from repro.learners import tree, linear, mlp, naive_bayes, centroid  # noqa: F401  (registration)
+
+__all__ = [
+    "LearnerSpec",
+    "WeakLearner",
+    "available_learners",
+    "get_learner",
+    "register",
+]

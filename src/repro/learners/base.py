@@ -1,0 +1,82 @@
+"""Model-agnostic weak-learner interface.
+
+MAFL's central claim is that the federated protocol never inspects the
+model: a weak hypothesis is an *opaque pytree* plus pure functions. Every
+learner in this package implements the ``WeakLearner`` interface below
+with **fixed shapes** so that:
+
+  * ``fit`` / ``predict`` jit-compile,
+  * ``vmap(fit)`` trains one hypothesis per collaborator in parallel,
+  * hypothesis pytrees can be exchanged with ``lax.all_gather`` and stored
+    stacked in the ensemble buffer (core/boosting.py).
+
+Sample weights ``w`` implement both AdaBoost weighting and masking
+(padded samples carry ``w == 0``); labels are int32 in ``[0, n_classes)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # opaque pytree — the whole point of model-agnosticism
+
+
+@dataclasses.dataclass(frozen=True)
+class LearnerSpec:
+    """Static description of the learning problem + learner hyperparams."""
+
+    name: str
+    n_features: int
+    n_classes: int
+    hparams: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def hp(self, key: str, default: Any) -> Any:
+        return self.hparams.get(key, default)
+
+
+@dataclasses.dataclass(frozen=True)
+class WeakLearner:
+    """A weak learner = init + weighted fit + predict_logits.
+
+    ``fit(spec, params, X, y, w, key) -> params`` must be a pure function
+    of fixed-shape inputs:  X [n, d] f32, y [n] i32, w [n] f32 (>= 0,
+    zero == masked-out).  ``predict_logits(spec, params, X) -> [n, K]``
+    returns per-class scores; ``predict`` takes their argmax.
+    """
+
+    name: str
+    init: Callable[[LearnerSpec, jax.Array], Params]
+    fit: Callable[[LearnerSpec, Params, jax.Array, jax.Array, jax.Array, jax.Array], Params]
+    predict_logits: Callable[[LearnerSpec, Params, jax.Array], jax.Array]
+    # Optional gradient-based warm-start fit (continues from ``params``) —
+    # required by the FedAvg/DNN workflow, meaningless for closed-form fits.
+    warm_fit: Callable[..., Params] | None = None
+
+    def predict(self, spec: LearnerSpec, params: Params, X: jax.Array) -> jax.Array:
+        return jnp.argmax(self.predict_logits(spec, params, X), axis=-1).astype(jnp.int32)
+
+
+_REGISTRY: Dict[str, WeakLearner] = {}
+
+
+def register(learner: WeakLearner) -> WeakLearner:
+    _REGISTRY[learner.name] = learner
+    return learner
+
+
+def get_learner(name: str) -> WeakLearner:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown learner {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def available_learners():
+    return sorted(_REGISTRY)
+
+
+def weighted_onehot(y: jax.Array, w: jax.Array, n_classes: int) -> jax.Array:
+    """[n] labels + [n] weights -> [n, K] weighted one-hot (masked rows = 0)."""
+    return jax.nn.one_hot(y, n_classes, dtype=w.dtype) * w[:, None]

@@ -1,0 +1,48 @@
+"""Weighted nearest-centroid classifier — the 'Neighbors' family.
+
+The paper's flexibility study used K-Nearest Neighbors; true kNN stores
+the entire training set in the hypothesis (unbounded wire size).  The
+fixed-shape, TPU-friendly member of the same family is nearest-centroid
+(equivalently 1-NN against class prototypes); the adaptation is recorded
+in DESIGN.md §7.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.learners.base import LearnerSpec, WeakLearner, register, weighted_onehot
+
+
+class CentroidParams(NamedTuple):
+    centroid: jax.Array  # [K, d]
+    log_prior: jax.Array  # [K] tie-break by class frequency
+
+
+def init_centroid(spec: LearnerSpec, key: jax.Array) -> CentroidParams:
+    return CentroidParams(jnp.zeros((spec.n_classes, spec.n_features)), jnp.zeros((spec.n_classes,)))
+
+
+def fit_centroid(spec, params, X, y, w, key) -> CentroidParams:
+    del params, key
+    wy = weighted_onehot(y, w, spec.n_classes)
+    cls_w = jnp.sum(wy, axis=0)
+    centroid = (wy.T @ X) / jnp.maximum(cls_w, 1e-12)[:, None]
+    # classes with (near-)zero total weight must never win: park their
+    # centroid far away instead of at the origin
+    empty = cls_w < 1e-9
+    centroid = jnp.where(empty[:, None], 1e6, centroid)
+    prior = cls_w / jnp.maximum(jnp.sum(cls_w), 1e-12)
+    return CentroidParams(centroid, jnp.log(prior + 1e-12))
+
+
+def centroid_logits(spec, params, X):
+    d2 = jnp.sum((X[:, None, :] - params.centroid[None, :, :]) ** 2, axis=-1)  # [n, K]
+    return -d2 + 1e-6 * params.log_prior[None, :]
+
+
+nearest_centroid = register(
+    WeakLearner("nearest_centroid", init_centroid, fit_centroid, centroid_logits)
+)

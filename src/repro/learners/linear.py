@@ -1,0 +1,46 @@
+"""Weighted ridge classifier (closed form) — the 'Linear models' family
+from the paper's flexibility study (§5.3, Ridge Linear Regression).
+
+Solves  W = (X^T Λ X + λ I)^-1 X^T Λ Y  with Λ = diag(sample weights),
+Y one-hot(+bias column folded into X).  Fixed-shape, jit/vmap friendly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.learners.base import LearnerSpec, WeakLearner, register, weighted_onehot
+
+
+class RidgeParams(NamedTuple):
+    W: jax.Array  # [d + 1, K]
+
+
+def _with_bias(X: jax.Array) -> jax.Array:
+    return jnp.concatenate([X, jnp.ones((X.shape[0], 1), X.dtype)], axis=1)
+
+
+def init_ridge(spec: LearnerSpec, key: jax.Array) -> RidgeParams:
+    return RidgeParams(W=jnp.zeros((spec.n_features + 1, spec.n_classes), jnp.float32))
+
+
+def fit_ridge(spec, params, X, y, w, key) -> RidgeParams:
+    del params, key
+    lam = spec.hp("l2", 1.0)
+    Xb = _with_bias(X)
+    Y = weighted_onehot(y, jnp.ones_like(w), spec.n_classes)
+    # Scale targets to +-1 ridge-classifier style.
+    Y = 2.0 * Y - 1.0
+    XtWX = (Xb * w[:, None]).T @ Xb + lam * jnp.eye(Xb.shape[1], dtype=Xb.dtype)
+    XtWY = (Xb * w[:, None]).T @ Y
+    W = jnp.linalg.solve(XtWX, XtWY)
+    return RidgeParams(W=W)
+
+
+def ridge_logits(spec, params, X):
+    return _with_bias(X) @ params.W
+
+
+ridge = register(WeakLearner("ridge", init_ridge, fit_ridge, ridge_logits))

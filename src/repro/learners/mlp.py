@@ -1,0 +1,89 @@
+"""Small MLP weak learner — the 'Neural Networks' family (paper §5.3 used
+SciKit-Learn's MLPClassifier).  One hidden layer, full-batch Adam on a
+weighted cross-entropy, unrolled with ``lax.scan`` so the whole fit jits.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.learners.base import LearnerSpec, WeakLearner, register
+
+
+class MLPParams(NamedTuple):
+    W1: jax.Array  # [d, h]
+    b1: jax.Array  # [h]
+    W2: jax.Array  # [h, K]
+    b2: jax.Array  # [K]
+
+
+def init_mlp(spec: LearnerSpec, key: jax.Array) -> MLPParams:
+    h = spec.hp("hidden", 64)
+    k1, k2 = jax.random.split(key)
+    s1 = 1.0 / jnp.sqrt(spec.n_features)
+    s2 = 1.0 / jnp.sqrt(h)
+    return MLPParams(
+        W1=jax.random.normal(k1, (spec.n_features, h)) * s1,
+        b1=jnp.zeros((h,)),
+        W2=jax.random.normal(k2, (h, spec.n_classes)) * s2,
+        b2=jnp.zeros((spec.n_classes,)),
+    )
+
+
+def _forward(p: MLPParams, X: jax.Array) -> jax.Array:
+    return jnp.tanh(X @ p.W1 + p.b1) @ p.W2 + p.b2
+
+
+def _train_mlp(spec, params, X, y, w, steps, lr) -> MLPParams:
+
+    wn = w / jnp.maximum(jnp.sum(w), 1e-12)
+
+    def loss_fn(p):
+        logits = _forward(p, X)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+        return jnp.sum(wn * nll)
+
+    grad_fn = jax.grad(loss_fn)
+
+    def step(carry, _):
+        p, m, v, t = carry
+        g = grad_fn(p)
+        t = t + 1
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * (b * b), v, g)
+        mh = jax.tree.map(lambda a: a / (1 - 0.9**t), m)
+        vh = jax.tree.map(lambda a: a / (1 - 0.999**t), v)
+        p = jax.tree.map(lambda a, mm, vv: a - lr * mm / (jnp.sqrt(vv) + 1e-8), p, mh, vh)
+        return (p, m, v, t), None
+
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    (params, _, _, _), _ = jax.lax.scan(
+        step, (params, zeros, zeros, jnp.zeros((), jnp.float32)), None, length=steps
+    )
+    return params
+
+
+def fit_mlp(spec, params, X, y, w, key) -> MLPParams:
+    """Fresh weak learner each boosting round (re-init from key)."""
+    del params
+    return _train_mlp(
+        spec, init_mlp(spec, key), X, y, w, spec.hp("steps", 200), spec.hp("lr", 0.05)
+    )
+
+
+def warm_fit_mlp(spec, params, X, y, w, key) -> MLPParams:
+    """FedAvg local training: continue from the broadcast global params."""
+    del key
+    return _train_mlp(
+        spec, params, X, y, w, spec.hp("local_steps", 20), spec.hp("lr", 0.05)
+    )
+
+
+def mlp_logits(spec, params, X):
+    return _forward(params, X)
+
+
+mlp = register(WeakLearner("mlp", init_mlp, fit_mlp, mlp_logits, warm_fit=warm_fit_mlp))

@@ -1,0 +1,43 @@
+"""Weighted Gaussian Naive Bayes — the 'Naive Bayes' family (§5.3)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.learners.base import LearnerSpec, WeakLearner, register, weighted_onehot
+
+
+class GNBParams(NamedTuple):
+    log_prior: jax.Array  # [K]
+    mean: jax.Array  # [K, d]
+    var: jax.Array  # [K, d]
+
+
+def init_gnb(spec: LearnerSpec, key: jax.Array) -> GNBParams:
+    K, d = spec.n_classes, spec.n_features
+    return GNBParams(jnp.zeros((K,)), jnp.zeros((K, d)), jnp.ones((K, d)))
+
+
+def fit_gnb(spec, params, X, y, w, key) -> GNBParams:
+    del params, key
+    wy = weighted_onehot(y, w, spec.n_classes)  # [n, K]
+    cls_w = jnp.sum(wy, axis=0)  # [K]
+    denom = jnp.maximum(cls_w, 1e-12)[:, None]
+    mean = (wy.T @ X) / denom  # [K, d]
+    sq = wy.T @ (X * X)
+    var = sq / denom - mean * mean
+    var = jnp.maximum(var, 1e-6) + spec.hp("var_smoothing", 1e-3) * jnp.var(X, axis=0)[None, :]
+    prior = cls_w / jnp.maximum(jnp.sum(cls_w), 1e-12)
+    return GNBParams(jnp.log(prior + 1e-12), mean, var)
+
+
+def gnb_logits(spec, params, X):
+    # log N(x | mu, sigma^2) summed over features, + log prior
+    diff = X[:, None, :] - params.mean[None, :, :]  # [n, K, d]
+    ll = -0.5 * (diff * diff / params.var[None] + jnp.log(2 * jnp.pi * params.var)[None])
+    return jnp.sum(ll, axis=-1) + params.log_prior[None, :]
+
+
+gaussian_nb = register(WeakLearner("gaussian_nb", init_gnb, fit_gnb, gnb_logits))

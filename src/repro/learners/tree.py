@@ -1,0 +1,170 @@
+"""Oblivious decision trees — the TPU-native analogue of the paper's
+10-leaf SciKit-Learn tree.
+
+An oblivious tree applies ONE (feature, threshold) test per level, shared
+by all nodes of that level (CatBoost-style).  A depth-``d`` tree has
+``2**d`` leaves and its fit/predict are dense fixed-shape tensor programs:
+
+  * features are quantile-binned once (``n_bins`` thresholds/feature);
+  * each level accumulates a weighted class histogram
+    C[leaf, feature, bin, class]  (the compute hot-spot — Pallas kernel
+    ``kernels/tree_hist.py`` implements the TPU version; here we use the
+    segment-sum formulation which doubles as its oracle);
+  * split scores for every (feature, bin) candidate come from a reverse
+    cumulative sum over the bin axis (split at bin b == "x > edges[b]");
+  * the best candidate maximises sum_leaf sum_side (sum_k c_k^2 / c_tot),
+    which is equivalent to minimising weighted Gini impurity.
+
+Sample weights implement AdaBoost reweighting and padding masks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.learners.base import LearnerSpec, WeakLearner, register, weighted_onehot
+
+
+class TreeParams(NamedTuple):
+    feature: jax.Array  # [depth] i32   — feature tested at each level
+    threshold: jax.Array  # [depth] f32 — raw threshold value
+    leaf_logits: jax.Array  # [2**depth, K] f32 — log class distribution
+
+
+def _quantile_edges(X: jax.Array, n_bins: int) -> jax.Array:
+    """Per-feature candidate thresholds from quantiles. [d, n_bins]."""
+    qs = jnp.linspace(0.0, 1.0, n_bins + 2)[1:-1]
+    return jnp.quantile(X, qs, axis=0).T  # [d, n_bins]
+
+
+def _digitize(X: jax.Array, edges: jax.Array) -> jax.Array:
+    """bin index of each sample/feature: #edges that x exceeds. [n, d] i32."""
+    return jnp.sum(X[:, :, None] > edges[None, :, :], axis=-1).astype(jnp.int32)
+
+
+def histogram(
+    bin_idx: jax.Array,  # [n, d] i32 in [0, n_bins]
+    leaf: jax.Array,  # [n] i32 in [0, n_leaves)
+    wy: jax.Array,  # [n, K] weighted one-hot labels
+    n_leaves: int,
+    n_bins: int,
+) -> jax.Array:
+    """C[leaf, d, n_bins+1, K] weighted class histogram (oracle for the
+    Pallas ``tree_hist`` kernel)."""
+    n, d = bin_idx.shape
+    k = wy.shape[1]
+    seg = (leaf[:, None] * d + jnp.arange(d)[None, :]) * (n_bins + 1) + bin_idx
+    flat = jax.ops.segment_sum(
+        jnp.broadcast_to(wy[:, None, :], (n, d, k)).reshape(n * d, k),
+        seg.reshape(n * d),
+        num_segments=n_leaves * d * (n_bins + 1),
+    )
+    return flat.reshape(n_leaves, d, n_bins + 1, k)
+
+
+def _split_scores(C: jax.Array) -> jax.Array:
+    """Score every (feature, bin) split candidate.
+
+    C: [L, d, B+1, K].  Splitting at bin b sends bins > b right.
+    Returns [d, B] scores (higher = better): sum over leaves and sides of
+    sum_k c_k^2 / c_tot  (maximising this minimises weighted Gini).
+    """
+    # right[:, :, b, :] = sum_{b' > b} C[..., b', :]
+    totals = jnp.sum(C, axis=2, keepdims=True)  # [L, d, 1, K]
+    right = totals - jnp.cumsum(C, axis=2)  # inclusive cumsum -> strictly greater
+    right = right[:, :, :-1, :]  # candidates b in [0, B)
+    left = totals - right  # [L, d, B, K]
+
+    def purity(side):  # sum_k c_k^2 / c_tot, guarded for empty sides
+        tot = jnp.sum(side, axis=-1)
+        return jnp.where(tot > 0, jnp.sum(side * side, axis=-1) / jnp.maximum(tot, 1e-12), 0.0)
+
+    return jnp.sum(purity(left) + purity(right), axis=0)  # [d, B]
+
+
+def fit_tree(
+    spec: LearnerSpec,
+    params: TreeParams,
+    X: jax.Array,
+    y: jax.Array,
+    w: jax.Array,
+    key: jax.Array,
+    *,
+    random_splits: bool = False,
+) -> TreeParams:
+    depth = spec.hp("depth", 4)
+    n_bins = spec.hp("n_bins", 16)
+    K = spec.n_classes
+    d = spec.n_features
+    del params  # trees are fit from scratch each round
+
+    edges = _quantile_edges(X, n_bins)  # [d, B]
+    bin_idx = _digitize(X, edges)  # [n, d]
+    wy = weighted_onehot(y, w, K)  # [n, K]
+
+    leaf = jnp.zeros(X.shape[0], dtype=jnp.int32)
+    feats, thrs = [], []
+    for level in range(depth):
+        C = histogram(bin_idx, leaf, wy, 2**level, n_bins)
+        scores = _split_scores(C)  # [d, B]
+        if random_splits:
+            # Extremely-randomised variant: score only a random subset of
+            # (feature, bin) candidates (ExtraTrees-style split sampling).
+            key, sub = jax.random.split(key)
+            keep = spec.hp("max_candidates", 8)
+            mask = jnp.zeros(scores.size, bool).at[
+                jax.random.choice(sub, scores.size, (keep,), replace=False)
+            ].set(True).reshape(scores.shape)
+            scores = jnp.where(mask, scores, -jnp.inf)
+        flat = jnp.argmax(scores)
+        f, b = flat // n_bins, flat % n_bins
+        feats.append(f.astype(jnp.int32))
+        thrs.append(edges[f, b])
+        leaf = leaf * 2 + (bin_idx[:, f] > b).astype(jnp.int32)
+
+    counts = jax.ops.segment_sum(wy, leaf, num_segments=2**depth)  # [leaves, K]
+    tot = jnp.sum(counts, axis=-1, keepdims=True)
+    # Empty leaves fall back to the global class prior.
+    prior = jnp.sum(wy, axis=0) / jnp.maximum(jnp.sum(wy), 1e-12)
+    dist = jnp.where(tot > 0, counts / jnp.maximum(tot, 1e-12), prior[None, :])
+    return TreeParams(
+        feature=jnp.stack(feats),
+        threshold=jnp.stack(thrs),
+        leaf_logits=jnp.log(dist + 1e-12),
+    )
+
+
+def init_tree(spec: LearnerSpec, key: jax.Array) -> TreeParams:
+    depth = spec.hp("depth", 4)
+    return TreeParams(
+        feature=jnp.zeros((depth,), jnp.int32),
+        threshold=jnp.zeros((depth,), jnp.float32),
+        leaf_logits=jnp.zeros((2**depth, spec.n_classes), jnp.float32),
+    )
+
+
+def tree_predict_logits(spec: LearnerSpec, params: TreeParams, X: jax.Array) -> jax.Array:
+    depth = params.feature.shape[0]
+    leaf = jnp.zeros(X.shape[0], dtype=jnp.int32)
+    for level in range(depth):
+        f = params.feature[level]
+        bit = X[:, f] > params.threshold[level]
+        leaf = leaf * 2 + bit.astype(jnp.int32)
+    return params.leaf_logits[leaf]
+
+
+decision_tree = register(
+    WeakLearner("decision_tree", init_tree, fit_tree, tree_predict_logits)
+)
+
+extra_tree = register(
+    WeakLearner(
+        "extra_tree",
+        init_tree,
+        functools.partial(fit_tree, random_splits=True),
+        tree_predict_logits,
+    )
+)

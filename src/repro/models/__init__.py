@@ -1,0 +1,1 @@
+"""Model zoo: generic decoder stack + per-family mixers."""

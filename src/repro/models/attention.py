@@ -1,0 +1,207 @@
+"""Attention sublayers: GQA/MQA with RoPE, sliding-window locals,
+soft-capping; full-sequence (train/prefill) and single-token decode
+against full or ring-buffer KV caches.
+
+Decode caches:
+  * full layers  — cache [B, T, Kv, D]; slot j holds position j;
+  * local layers — ring buffer of ``window`` slots (slot = pos % window),
+    the structural reason gemma2/llama4 qualify for ``long_500k``.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.models.layers import make_param, pdtype, rope
+from repro.models.shardings import maybe_gather_weight as _mg
+
+
+def init_attn(cfg: ArchConfig, key, cross: bool = False) -> Tuple[Dict, Dict]:
+    d, H, Kv, D = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": make_param(ks[0], (d, H, D), dt, fan_in=d),
+        "wk": make_param(ks[1], (d, Kv, D), dt, fan_in=d),
+        "wv": make_param(ks[2], (d, Kv, D), dt, fan_in=d),
+        "wo": make_param(ks[3], (H, D, d), dt, fan_in=H * D),
+    }
+    axes = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    return params, axes
+
+
+_QKV_AX = ("embed", "heads", "head_dim")
+
+
+def _project_qkv(p, x, kv_x=None):
+    kv_x = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, _mg(p["wq"], _QKV_AX))
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, _mg(p["wk"], ("embed", "kv_heads", "head_dim")))
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, _mg(p["wv"], ("embed", "kv_heads", "head_dim")))
+    return q, k, v
+
+
+# Block-local computation for sliding-window layers: O(S * 2w) instead of
+# O(S^2).  Semantically identical to masked full attention (every query in
+# chunk i only sees keys in chunks i-1, i under `pos_q - pos_k < w`).
+# §Perf iteration — toggleable so the baseline roofline stays reproducible.
+CHUNKED_LOCAL = True
+
+
+def set_chunked_local(value: bool) -> None:
+    global CHUNKED_LOCAL
+    CHUNKED_LOCAL = value
+
+
+def _chunked_local_attention(cfg, q, k, v, window: int) -> jax.Array:
+    """q/k/v: [B, S, H|Kv, D] with S % window == 0.  Causal sliding window."""
+    B, S, H, D = q.shape
+    Kv = k.shape[2]
+    g = H // Kv
+    w = window
+    nc = S // w
+    qc = q.reshape(B, nc, w, H, D)
+    # keys for chunk i = [chunk i-1 ; chunk i]  (zero-pad chunk -1)
+    kc = k.reshape(B, nc, w, Kv, D)
+    vc = v.reshape(B, nc, w, Kv, D)
+    k_prev = jnp.pad(kc[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    v_prev = jnp.pad(vc[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    k2 = jnp.concatenate([k_prev, kc], axis=2)  # [B, nc, 2w, Kv, D]
+    v2 = jnp.concatenate([v_prev, vc], axis=2)
+
+    scale = 1.0 / jnp.sqrt(D)
+    qg = qc.reshape(B, nc, w, Kv, g, D)
+    logits = jnp.einsum(
+        "bcsKgd,bctKd->bcKgst", qg, k2, preferred_element_type=jnp.float32
+    ) * scale  # [B, nc, Kv, g, w, 2w]
+    if cfg.logit_softcap is not None:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    qpos = jnp.arange(w)[:, None] + w  # position within the 2w key span
+    kpos = jnp.arange(2 * w)[None, :]
+    mask = (kpos <= qpos) & ((qpos - kpos) < w)  # causal + window
+    first = jnp.arange(nc) == 0  # chunk 0 has no (real) previous chunk
+    mask = mask[None, :, :] & ~(first[:, None, None] & (kpos < w)[None])
+    logits = jnp.where(mask[None, :, None, None, :, :], logits, -1e30)
+    att = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bcKgst,bctKd->bcsKgd", att, v2, preferred_element_type=jnp.float32)
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def attend_full(
+    cfg: ArchConfig,
+    p: Dict,
+    x: jax.Array,  # [B, S, d]
+    positions: jax.Array,  # [S]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    use_rope: bool = True,
+    use_pallas: bool = False,
+    kv_x: Optional[jax.Array] = None,  # cross-attention source
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full-sequence attention; returns (out, (k, v)) so prefill can cache."""
+    q, k, v = _project_qkv(p, x, kv_x)
+    if use_rope and cfg.pos_emb == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions if kv_x is None else jnp.arange(k.shape[1]), cfg.rope_theta)
+    S = q.shape[1]
+    if (
+        CHUNKED_LOCAL
+        and window is not None
+        and causal
+        and kv_x is None
+        and not use_pallas
+        and S == k.shape[1]
+        and S % window == 0
+        and S // window >= 2
+    ):
+        out = _chunked_local_attention(cfg, q, k, v, window)
+    else:
+        # ops.attention expects [B, H, S, D]
+        out = ops.attention(
+            q.transpose(0, 2, 1, 3),
+            k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3),
+            causal=causal,
+            window=window,
+            softcap=cfg.logit_softcap,
+            use_pallas=use_pallas,
+        ).transpose(0, 2, 1, 3)  # [B, S, H, D]
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, (k, v)
+
+
+class LayerCache(NamedTuple):
+    """KV cache for one attention layer (full or ring-buffer)."""
+
+    k: jax.Array  # [B, T_cache, Kv, D]
+    v: jax.Array  # [B, T_cache, Kv, D]
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int, window: Optional[int], dtype) -> LayerCache:
+    T = min(window, seq_len) if window else seq_len
+    shape = (batch, T, cfg.n_kv_heads, cfg.hd)
+    return LayerCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def attend_decode(
+    cfg: ArchConfig,
+    p: Dict,
+    x: jax.Array,  # [B, 1, d]
+    cache: LayerCache,
+    pos: jax.Array,  # scalar i32 — position of the new token
+    *,
+    window: Optional[int] = None,
+    use_rope: bool = True,
+    cross: bool = False,
+) -> Tuple[jax.Array, LayerCache]:
+    """One decode step.  For ``cross`` the cache holds encoder K/V and is
+    read-only.  For local layers the cache is a ring buffer."""
+    B, _, _ = x.shape
+    T = cache.k.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])  # [B, 1, H, D]
+    if use_rope and cfg.pos_emb == "rope":
+        q = rope(q, pos[None], cfg.rope_theta)
+
+    if cross:
+        k, v = cache.k, cache.v
+        valid = jnp.ones((T,), bool)
+        new_cache = cache
+    else:
+        kn = jnp.einsum("bsd,dhk->bshk", x, p["wk"])  # [B, 1, Kv, D]
+        vn = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        if use_rope and cfg.pos_emb == "rope":
+            kn = rope(kn, pos[None], cfg.rope_theta)
+        slot = pos % T if window else pos
+        k = jax.lax.dynamic_update_slice(cache.k, kn.astype(cache.k.dtype), (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache.v, vn.astype(cache.v.dtype), (0, slot, 0, 0))
+        idx = jnp.arange(T)
+        if window:
+            valid = (idx <= pos) | (pos >= T)  # ring: all slots valid once warm
+        else:
+            valid = idx <= pos
+        new_cache = LayerCache(k, v)
+
+    # Grouped heads attend without materialising repeated K/V (critical at
+    # 500k cache): q [B,1,H,D] -> [B,1,Kv,g,D]; logits accumulate in f32.
+    Kv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, 1, Kv, g, cfg.hd) * (1.0 / jnp.sqrt(cfg.hd)).astype(q.dtype)
+    logits = jnp.einsum("bsKgd,btKd->bKgst", qg, k, preferred_element_type=jnp.float32)
+    if cfg.logit_softcap is not None:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    att = jax.nn.softmax(logits, axis=-1)  # [B, Kv, g, 1, T] f32
+    out = jnp.einsum(
+        "bKgst,btKd->bsKgd", att, v, preferred_element_type=jnp.float32
+    ).reshape(B, 1, cfg.n_heads, cfg.hd).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, new_cache

@@ -1,0 +1,140 @@
+"""Shared neural building blocks (RMSNorm, RoPE, GLU MLPs, embeddings).
+
+Every init function returns ``(params, axes)`` where ``axes`` mirrors the
+param pytree with tuples of *logical* axis names; models/shardings.py
+resolves logical axes onto mesh axes with divisibility checks.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.shardings import maybe_gather_weight as _mg
+
+
+def pdtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def make_param(key, shape, dtype, fan_in: int | None = None):
+    scale = 1.0 / jnp.sqrt(fan_in if fan_in else shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# -- norms ------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def init_norm(cfg: ArchConfig) -> Tuple[jax.Array, Any]:
+    return jnp.zeros((cfg.d_model,), jnp.float32), ("embed",)
+
+
+# -- rotary / sinusoidal positions -------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D]; positions: [S] or [B, S]."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)  # [half]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[:, :, None].astype(jnp.float32) * freqs[None, None, :]  # [B, S, half]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]  # [B, S, 1, half]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    """[S] -> [S, d] classic transformer sin/cos table."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# -- MLPs ---------------------------------------------------------------------
+
+
+def init_mlp(cfg: ArchConfig, key, d_ff: int | None = None) -> Tuple[Dict, Dict]:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        params = {
+            "w_gate": make_param(ks[0], (d, ff), dt),
+            "w_up": make_param(ks[1], (d, ff), dt),
+            "w_down": make_param(ks[2], (ff, d), dt, fan_in=ff),
+        }
+        axes = {
+            "w_gate": ("embed", "ff"),
+            "w_up": ("embed", "ff"),
+            "w_down": ("ff", "embed"),
+        }
+    else:  # plain gelu MLP (whisper)
+        params = {
+            "w_up": make_param(ks[0], (d, ff), dt),
+            "b_up": jnp.zeros((ff,), jnp.float32),
+            "w_down": make_param(ks[1], (ff, d), dt, fan_in=ff),
+            "b_down": jnp.zeros((d,), jnp.float32),
+        }
+        axes = {
+            "w_up": ("embed", "ff"),
+            "b_up": ("ff",),
+            "w_down": ("ff", "embed"),
+            "b_down": ("embed",),
+        }
+    return params, axes
+
+
+def apply_mlp(cfg: ArchConfig, p: Dict, x: jax.Array) -> jax.Array:
+    up_ax, down_ax = ("embed", "ff"), ("ff", "embed")
+    if cfg.mlp_type == "swiglu":
+        return (
+            jax.nn.silu(x @ _mg(p["w_gate"], up_ax)) * (x @ _mg(p["w_up"], up_ax))
+        ) @ _mg(p["w_down"], down_ax)
+    if cfg.mlp_type == "geglu":
+        return (
+            jax.nn.gelu(x @ _mg(p["w_gate"], up_ax), approximate=True)
+            * (x @ _mg(p["w_up"], up_ax))
+        ) @ _mg(p["w_down"], down_ax)
+    h = jax.nn.gelu(x @ _mg(p["w_up"], up_ax) + p["b_up"].astype(x.dtype), approximate=True)
+    return h @ _mg(p["w_down"], down_ax) + p["b_down"].astype(x.dtype)
+
+
+# -- embeddings ---------------------------------------------------------------
+
+
+def init_embed(cfg: ArchConfig, key) -> Tuple[Dict, Dict]:
+    V = cfg.padded_vocab()
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 2)
+    params = {"embedding": make_param(ks[0], (V, cfg.d_model), dt, fan_in=cfg.d_model)}
+    axes = {"embedding": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        params["unembed"] = make_param(ks[1], (cfg.d_model, V), dt)
+        axes["unembed"] = ("embed", "vocab")
+    return params, axes
+
+
+def embed_tokens(cfg: ArchConfig, p: Dict, tokens: jax.Array) -> jax.Array:
+    x = p["embedding"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(cfg: ArchConfig, p: Dict, x: jax.Array) -> jax.Array:
+    w = p["embedding"].T if cfg.tie_embeddings else p["unembed"]
+    logits = (x @ w).astype(jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits

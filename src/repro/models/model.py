@@ -1,0 +1,254 @@
+"""Public model API consumed by launch/, fl/ and the benchmarks:
+
+  * ``init_params`` / ``shapes_and_axes``
+  * ``loss_fn``        — next-token CE, sequence-chunked (never
+                         materialises [B, S, V] logits)
+  * ``train_step``     — AdamW step; MAFL's standard-workflow local step
+  * ``prefill``        — full-sequence forward returning decode caches
+  * ``serve_step``     — one token against the cache pytree
+  * ``input_specs``    — ShapeDtypeStruct stand-ins per InputShape for the
+                         multi-pod dry-run (no allocation)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import transformer
+from repro.models.layers import pdtype, unembed
+from repro.models.transformer import decode_step, forward, init_caches, init_params, shapes_and_axes  # noqa: F401
+from repro.optim.optimizers import AdamWConfig, AdamWState, adamw_update, init_adamw
+
+MOE_AUX_WEIGHT = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def _chunked_ce(cfg: ArchConfig, params: Dict, hidden: jax.Array, targets: jax.Array,
+                mask: jax.Array, chunk: int = 512) -> jax.Array:
+    """Cross-entropy over sequence chunks; remat keeps the [B, c, V] logits
+    transient (fwd AND bwd), which is what makes 256k-vocab training fit."""
+    B, S, d = hidden.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+
+    def chunk_loss(h, t, m):
+        logits = unembed(cfg, params["embed"], h)  # [B, c, V] f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # one-hot contraction instead of take_along_axis: with V sharded
+        # over 'model', the gather would force XLA to all-gather the full
+        # logits (observed: 68 GB/chunk on grok); the einsum reduces
+        # locally and emits a tiny [B, c] all-reduce instead.
+        onehot = jax.nn.one_hot(t, logits.shape[-1], dtype=logits.dtype)
+        ll = jnp.einsum("bcv,bcv->bc", logits, onehot)
+        return jnp.sum((lse - ll) * m), jnp.sum(m)
+
+    chunk_loss = jax.checkpoint(chunk_loss)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        l, c = chunk_loss(*xs)
+        return (tot + l, cnt + c), None
+
+    hr = hidden[:, : n * chunk].reshape(B, n, chunk, d).swapaxes(0, 1)
+    tr = targets[:, : n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+    mr = mask[:, : n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros(()), jnp.zeros(())), (hr, tr, mr),
+        unroll=transformer.scan_unroll(n),
+    )
+    if rem:
+        l, c = chunk_loss(hidden[:, n * chunk :], targets[:, n * chunk :], mask[:, n * chunk :])
+        tot, cnt = tot + l, cnt + c
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(cfg: ArchConfig, params: Dict, batch: Dict[str, jax.Array],
+            use_pallas: bool = False) -> jax.Array:
+    tokens = batch["tokens"]  # [B, S+1]
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    hidden, aux, _ = forward(
+        cfg, params, inputs,
+        prefix=batch.get("prefix"), frames=batch.get("frames"),
+        use_pallas=use_pallas,
+    )
+    P = cfg.prefix_tokens if batch.get("prefix") is not None else 0
+    if P:
+        hidden = hidden[:, P:]  # loss only on token positions
+    mask = batch.get("loss_mask", jnp.ones_like(targets, jnp.float32))
+    loss = _chunked_ce(cfg, params, hidden, targets, mask)
+    return loss + MOE_AUX_WEIGHT * aux
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def init_train_state(cfg: ArchConfig, key, opt_cfg: AdamWConfig | None = None) -> TrainState:
+    params = init_params(cfg, key)
+    return TrainState(params, init_adamw(params))
+
+
+def train_step(
+    cfg: ArchConfig,
+    state: TrainState,
+    batch: Dict[str, jax.Array],
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    use_pallas: bool = False,
+    accum: int = 1,
+) -> Tuple[TrainState, Dict[str, jax.Array]]:
+    """One synchronous step == MAFL standard workflow with 1 local step
+    (DESIGN.md §5): gradient psum over (pod, data) IS the FedAvg round.
+
+    ``accum`` > 1 splits the batch into microbatches and accumulates
+    grads in a scan — a §Perf memory iteration (activation footprint
+    scales with B/accum at the cost of an f32 grad buffer).
+    """
+    if accum == 1:
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, use_pallas)
+        )(state.params)
+    else:
+        B = batch["tokens"].shape[0]
+        assert B % accum == 0, (B, accum)
+        from repro.models.shardings import constrain_microbatch
+
+        micro = jax.tree.map(
+            lambda x: constrain_microbatch(
+                x.reshape((accum, B // accum) + x.shape[1:])
+            ),
+            batch,
+        )
+        grad_fn = jax.value_and_grad(lambda p, mb: loss_fn(cfg, p, mb, use_pallas))
+
+        def acc_body(carry, mb):
+            loss_sum, g = carry
+            l, gi = grad_fn(state.params, mb)
+            g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g, gi)
+            return (loss_sum + l, g), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+        )
+        (loss, grads), _ = jax.lax.scan(acc_body, (jnp.zeros(()), zeros), micro)
+        loss = loss / accum
+        grads = jax.tree.map(lambda g: g / accum, grads)
+    params, opt, gnorm = adamw_update(opt_cfg, state.params, grads, state.opt)
+    return TrainState(params, opt), {"loss": loss, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+class ServeState(NamedTuple):
+    caches: Any  # transformer.init_caches pytree
+    pos: jax.Array  # scalar i32 — next absolute position
+
+
+def init_serve_state(cfg: ArchConfig, batch: int, cache_len: int) -> ServeState:
+    return ServeState(init_caches(cfg, batch, cache_len), jnp.zeros((), jnp.int32))
+
+
+def _pad_caches(cfg: ArchConfig, caches: Any, cache_len: int) -> Any:
+    """Grow full-attention KV caches to ``cache_len`` slots (zero-filled
+    future positions; the decode validity mask `j <= pos` ignores them).
+    Window layers stay at ``window`` slots; SSM states are size-free."""
+    unit, _ = cfg.pattern()
+
+    def grow(lc):
+        if lc is None or not isinstance(lc, transformer.attn.LayerCache):
+            return lc
+        T = lc.k.shape[2]  # leaves carry the leading scan dim [R, B, T, ...]
+        if T >= cache_len:
+            return lc
+        pad = [(0, 0), (0, 0), (0, cache_len - T), (0, 0), (0, 0)]
+        return transformer.attn.LayerCache(jnp.pad(lc.k, pad), jnp.pad(lc.v, pad))
+
+    out = {}
+    for i, desc in enumerate(unit):
+        c = caches[f"L{i}"]
+        self_c, cross_c = c if cfg.arch_type == "audio" else (c, None)
+        if desc.mixer.startswith("attn") and _grow_ok(cfg, desc):
+            self_c = grow(self_c)
+        out[f"L{i}"] = (self_c, cross_c) if cfg.arch_type == "audio" else self_c
+    return out
+
+
+def _grow_ok(cfg: ArchConfig, desc) -> bool:
+    return transformer._mixer_window(cfg, desc) is None  # ring buffers stay fixed
+
+
+def prefill(
+    cfg: ArchConfig,
+    params: Dict,
+    batch: Dict[str, jax.Array],
+    cache_len: Optional[int] = None,
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, ServeState]:
+    """Full-sequence forward; returns (last-token logits [B, V], state).
+    ``cache_len`` reserves decode slots beyond the prompt (full layers)."""
+    tokens = batch["tokens"]  # [B, S]
+    hidden, _, caches = forward(
+        cfg, params, tokens,
+        prefix=batch.get("prefix"), frames=batch.get("frames"),
+        use_pallas=use_pallas, collect_cache=True,
+    )
+    logits = unembed(cfg, params["embed"], hidden[:, -1:, :])[:, 0]
+    S_total = hidden.shape[1]
+    if cache_len is not None:
+        caches = _pad_caches(cfg, caches, cache_len)
+    return logits, ServeState(caches, jnp.asarray(S_total, jnp.int32))
+
+
+def serve_step(
+    cfg: ArchConfig, params: Dict, state: ServeState, token: jax.Array
+) -> Tuple[jax.Array, ServeState]:
+    """token: [B, 1] i32 -> (logits [B, V], new state)."""
+    logits, caches = decode_step(cfg, params, state.caches, token, state.pos)
+    return logits, ServeState(caches, state.pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStruct stand-ins — no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    """Stand-ins for every model input of the given InputShape."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = pdtype(cfg)
+    sds = jax.ShapeDtypeStruct
+
+    def extras() -> Dict[str, Any]:
+        ex: Dict[str, Any] = {}
+        if cfg.arch_type == "vlm":
+            ex["prefix"] = sds((B, cfg.prefix_tokens, cfg.d_model), dt)
+        if cfg.arch_type == "audio":
+            ex["frames"] = sds((B, cfg.encoder_seq, cfg.d_model), dt)
+        return ex
+
+    if shape.kind == "train":
+        return {"tokens": sds((B, S + 1), i32), **extras()}
+    if shape.kind == "prefill":
+        return {"tokens": sds((B, S), i32), **extras()}
+    if shape.kind == "decode":
+        state = jax.eval_shape(lambda: init_serve_state(cfg, B, S))
+        return {"token": sds((B, 1), i32), "state": state}
+    raise ValueError(shape.kind)

@@ -1,0 +1,378 @@
+"""State-space / recurrent mixers: Mamba (jamba), mLSTM + sLSTM (xlstm).
+
+All three keep **constant-size state**, which is what qualifies their
+architectures for the ``long_500k`` decode shape.
+
+Training-time parallelism (TPU adaptation — no CUDA selective-scan):
+  * Mamba: chunked ``lax.scan`` over sequence chunks with an
+    ``associative_scan`` inside each chunk (bounds the materialised
+    [B, chunk, d_inner, d_state] tensor).
+  * mLSTM: chunkwise-parallel linear attention — intra-chunk quadratic
+    term + inter-chunk recurrent matrix memory (scan over chunks).
+  * sLSTM: inherently sequential (the paper says so) — ``lax.scan`` over
+    time with per-head block-diagonal recurrence.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import make_param, pdtype
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # [B, d_conv - 1, d_inner] — trailing inputs
+    ssm: jax.Array  # [B, d_inner, d_state]
+
+
+def _mamba_dims(cfg: ArchConfig) -> Tuple[int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    dt_rank = max(1, cfg.d_model // 16)
+    return d_inner, dt_rank, cfg.d_state
+
+
+def init_mamba(cfg: ArchConfig, key) -> Tuple[Dict, Dict]:
+    d = cfg.d_model
+    di, dtr, ds = _mamba_dims(cfg)
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 6)
+    params = {
+        "in_proj": make_param(ks[0], (d, 2 * di), dt),
+        "conv_w": make_param(ks[1], (cfg.d_conv, di), dt, fan_in=cfg.d_conv),
+        "x_proj": make_param(ks[2], (di, dtr + 2 * ds), dt, fan_in=di),
+        "dt_proj": make_param(ks[3], (dtr, di), dt, fan_in=dtr),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, ds))
+        ),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": make_param(ks[4], (di, d), dt, fan_in=di),
+    }
+    axes = {
+        "in_proj": ("embed", "dinner"),
+        "conv_w": (None, "dinner"),
+        "x_proj": ("dinner", None),
+        "dt_proj": (None, "dinner"),
+        "dt_bias": ("dinner",),
+        "A_log": ("dinner", None),
+        "D": ("dinner",),
+        "out_proj": ("dinner", "embed"),
+    }
+    return params, axes
+
+
+def _mamba_inner(p, xz, conv_init, ssm_init, cfg):
+    """xz: [B, S, 2*di] -> (y [B, S, di], final MambaState)."""
+    di, dtr, ds = _mamba_dims(cfg)
+    x, z = jnp.split(xz, 2, axis=-1)  # [B, S, di]
+    B_, S, _ = x.shape
+
+    # causal depthwise conv over time (kernel d_conv)
+    xpad = jnp.concatenate([conv_init.astype(x.dtype), x], axis=1)  # [B, S+dc-1, di]
+    conv_tail = xpad[:, S:, :]  # new trailing state (last dc-1 inputs)
+    w = p["conv_w"].astype(jnp.float32)
+    xc = sum(
+        xpad[:, i : i + S, :].astype(jnp.float32) * w[i][None, None, :]
+        for i in range(cfg.d_conv)
+    )
+    xc = jax.nn.silu(xc)  # [B, S, di] f32
+
+    proj = xc.astype(x.dtype) @ p["x_proj"]  # [B, S, dtr + 2 ds]
+    dt_in, Bc, Cc = jnp.split(proj.astype(jnp.float32), [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])  # [B,S,di]
+    A = -jnp.exp(p["A_log"])  # [di, ds]
+
+    # discretise: h_t = exp(dt A) h_{t-1} + dt * B_t * x_t ; y = C_t . h + D x
+    dA = jnp.exp(dt[..., None] * A[None, None])  # [B, S, di, ds]
+    dBx = dt[..., None] * Bc[:, :, None, :] * xc[..., None]  # [B, S, di, ds]
+
+    chunk = min(128, S)
+    n_chunks = S // chunk
+    assert S % chunk == 0, (S, chunk)
+
+    def scan_chunk(h0, inputs):
+        dA_c, dBx_c = inputs  # [chunk, B, di, ds]
+
+        def combine(a, b):
+            (A1, b1), (A2, b2) = a, b
+            return (A1 * A2, b1 * A2 + b2)
+
+        Acum, hpart = jax.lax.associative_scan(combine, (dA_c, dBx_c), axis=0)
+        h = hpart + Acum * h0[None]  # [chunk, B, di, ds]
+        return h[-1], h
+
+    dA_r = dA.transpose(1, 0, 2, 3).reshape(n_chunks, chunk, B_, di, ds)
+    dBx_r = dBx.transpose(1, 0, 2, 3).reshape(n_chunks, chunk, B_, di, ds)
+    h_last, hs = jax.lax.scan(scan_chunk, ssm_init.astype(jnp.float32), (dA_r, dBx_r))
+    hs = hs.reshape(S, B_, di, ds).transpose(1, 0, 2, 3)  # [B, S, di, ds]
+
+    y = jnp.einsum("bsdn,bsn->bsd", hs, Cc) + p["D"][None, None] * xc
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return y.astype(xz.dtype), MambaState(conv_tail, h_last.astype(jnp.float32))
+
+
+def apply_mamba(cfg: ArchConfig, p: Dict, x: jax.Array) -> jax.Array:
+    """Training / prefill forward. x: [B, S, d]."""
+    B, S, _ = x.shape
+    di, _, ds = _mamba_dims(cfg)
+    xz = x @ p["in_proj"]
+    conv0 = jnp.zeros((B, cfg.d_conv - 1, di), x.dtype)
+    ssm0 = jnp.zeros((B, di, ds), jnp.float32)
+    y, _ = _mamba_inner(p, xz, conv0, ssm0, cfg)
+    return y @ p["out_proj"]
+
+
+def mamba_prefill(cfg, p, x):
+    B, S, _ = x.shape
+    di, _, ds = _mamba_dims(cfg)
+    xz = x @ p["in_proj"]
+    conv0 = jnp.zeros((B, cfg.d_conv - 1, di), x.dtype)
+    ssm0 = jnp.zeros((B, di, ds), jnp.float32)
+    y, state = _mamba_inner(p, xz, conv0, ssm0, cfg)
+    return y @ p["out_proj"], state
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int, dtype) -> MambaState:
+    di, _, ds = _mamba_dims(cfg)
+    return MambaState(
+        jnp.zeros((batch, cfg.d_conv - 1, di), dtype),
+        jnp.zeros((batch, di, ds), jnp.float32),
+    )
+
+
+def mamba_decode(cfg: ArchConfig, p: Dict, x: jax.Array, state: MambaState):
+    """One token. x: [B, 1, d]."""
+    y, new_state = _mamba_inner(p, x @ p["in_proj"], state.conv, state.ssm, cfg)
+    return y @ p["out_proj"], new_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory block, chunkwise-parallel)
+# ---------------------------------------------------------------------------
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array  # [B, H, D, D] matrix memory
+    n: jax.Array  # [B, H, D] normaliser
+
+
+def _mlstm_dims(cfg: ArchConfig) -> Tuple[int, int]:
+    di = cfg.ssm_expand * cfg.d_model  # up-projection factor 2 (xLSTM pf=2)
+    return di, di // cfg.n_heads  # (d_inner, head_dim)
+
+
+def init_mlstm(cfg: ArchConfig, key) -> Tuple[Dict, Dict]:
+    d, H = cfg.d_model, cfg.n_heads
+    di, Dh = _mlstm_dims(cfg)
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 7)
+    params = {
+        "up_proj": make_param(ks[0], (d, 2 * di), dt),  # (x_inner, z gate)
+        "wq": make_param(ks[1], (di, H, Dh), dt, fan_in=di),
+        "wk": make_param(ks[2], (di, H, Dh), dt, fan_in=di),
+        "wv": make_param(ks[3], (di, H, Dh), dt, fan_in=di),
+        "w_if": make_param(ks[4], (di, 2, H), jnp.float32, fan_in=di),  # input/forget gates
+        "b_if": jnp.zeros((2, H), jnp.float32),
+        "down_proj": make_param(ks[5], (di, d), dt, fan_in=di),
+    }
+    axes = {
+        "up_proj": ("embed", "dinner"),
+        "wq": ("dinner", "heads", "head_dim"),
+        "wk": ("dinner", "heads", "head_dim"),
+        "wv": ("dinner", "heads", "head_dim"),
+        "w_if": ("dinner", None, "heads"),
+        "b_if": (None, "heads"),
+        "down_proj": ("dinner", "embed"),
+    }
+    return params, axes
+
+
+def _mlstm_gates(p, xi):
+    """log-f (sigmoid in log space) and log-i (clipped exp gate)."""
+    gf = jnp.einsum("bsd,dgh->bsgh", xi.astype(jnp.float32), p["w_if"]) + p["b_if"]
+    log_i = jnp.clip(gf[:, :, 0, :], -8.0, 8.0)  # [B, S, H]
+    log_f = jax.nn.log_sigmoid(gf[:, :, 1, :])  # [B, S, H] (<= 0)
+    return log_i, log_f
+
+
+def _mlstm_chunk(cfg, q, k, v, log_i, log_f, C0, n0):
+    """One chunk, parallel form.  q/k/v: [B, L, H, D]; gates [B, L, H]."""
+    B, L, H, D = q.shape
+    F = jnp.cumsum(log_f, axis=1)  # [B, L, H] inclusive
+    scale = 1.0 / jnp.sqrt(D)
+
+    # intra-chunk: D[t,s] = exp(F_t - F_s) * i_s  for s <= t
+    dmat = F[:, :, None, :] - F[:, None, :, :] + log_i[:, None, :, :]  # [B, T, S, H]
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+    w = jnp.exp(dmat)  # decay-gated weights
+    logits = jnp.einsum("bthd,bshd->btsh", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    intra = jnp.einsum("btsh,bshd->bthd", logits * w, v.astype(jnp.float32))
+    intra_n = jnp.einsum("btsh,bshd->bthd", w, k.astype(jnp.float32))  # normaliser numer.
+
+    # inter-chunk: h_t += exp(F_t) q_t C0 ; n_t += exp(F_t) q_t . n0
+    decay_t = jnp.exp(F)  # [B, L, H]
+    inter = jnp.einsum("bthd,bhde->bthe", q.astype(jnp.float32) * scale, C0) * decay_t[..., None]
+    inter_n = n0[:, None] * decay_t[..., None]  # [B, L, H, D]
+
+    h_num = intra + inter
+    n_vec = intra_n + inter_n
+    denom = jnp.maximum(
+        jnp.abs(jnp.sum(q.astype(jnp.float32) * scale * n_vec, axis=-1)), 1.0
+    )  # [B, L, H]
+    h = h_num / denom[..., None]
+
+    # chunk-final state: C_L = exp(F_L) C0 + sum_s exp(F_L - F_s) i_s k_s v_s^T
+    wL = jnp.exp(F[:, -1:, :] - F + log_i)  # [B, L, H]
+    C_new = jnp.exp(F[:, -1])[:, :, None, None] * C0 + jnp.einsum(
+        "bshd,bshe,bsh->bhde", k.astype(jnp.float32), v.astype(jnp.float32), wL
+    )
+    n_new = jnp.exp(F[:, -1])[:, :, None] * n0 + jnp.einsum(
+        "bshd,bsh->bhd", k.astype(jnp.float32), wL
+    )
+    return h, C_new, n_new
+
+
+def apply_mlstm(cfg: ArchConfig, p: Dict, x: jax.Array, state: MLSTMState | None = None):
+    """x: [B, S, d] -> ([B, S, d], final state)."""
+    B, S, _ = x.shape
+    di, Dh = _mlstm_dims(cfg)
+    H = cfg.n_heads
+    up = x @ p["up_proj"]
+    xi, z = jnp.split(up, 2, axis=-1)  # [B, S, di]
+    q = jnp.einsum("bsd,dhk->bshk", xi, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xi, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xi, p["wv"])
+    log_i, log_f = _mlstm_gates(p, xi)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+        n0 = jnp.zeros((B, H, Dh), jnp.float32)
+    else:
+        C0, n0 = state.C, state.n
+
+    chunk = min(128, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+
+    def scan_fn(carry, inputs):
+        C, n = carry
+        qc, kc, vc, lic, lfc = inputs
+        h, C, n = _mlstm_chunk(cfg, qc, kc, vc, lic, lfc, C, n)
+        return (C, n), h
+
+    resh = lambda a: a.reshape(B, n_chunks, chunk, *a.shape[2:]).swapaxes(0, 1)
+    (Cf, nf), hs = jax.lax.scan(
+        scan_fn, (C0, n0), (resh(q), resh(k), resh(v), resh(log_i), resh(log_f))
+    )
+    h = hs.swapaxes(0, 1).reshape(B, S, H, Dh).reshape(B, S, di)
+    out = (h.astype(x.dtype) * jax.nn.silu(z)) @ p["down_proj"]
+    return out, MLSTMState(Cf, nf)
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int) -> MLSTMState:
+    di, Dh = _mlstm_dims(cfg)
+    return MLSTMState(
+        jnp.zeros((batch, cfg.n_heads, Dh, Dh), jnp.float32),
+        jnp.zeros((batch, cfg.n_heads, Dh), jnp.float32),
+    )
+
+
+def mlstm_decode(cfg: ArchConfig, p: Dict, x: jax.Array, state: MLSTMState):
+    out, new_state = apply_mlstm(cfg, p, x, state)  # S == 1 chunk
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory block with exponential gating; sequential scan)
+# ---------------------------------------------------------------------------
+
+
+class SLSTMState(NamedTuple):
+    h: jax.Array  # [B, H, D]
+    c: jax.Array  # [B, H, D]
+    n: jax.Array  # [B, H, D]
+    m: jax.Array  # [B, H, D] gate stabiliser
+
+
+def _slstm_dims(cfg: ArchConfig) -> Tuple[int, int]:
+    H = cfg.n_heads
+    return H, cfg.d_model // H
+
+
+def init_slstm(cfg: ArchConfig, key) -> Tuple[Dict, Dict]:
+    d = cfg.d_model
+    H, Dh = _slstm_dims(cfg)
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 4)
+    ffd = max(1, int(cfg.d_model * 4 / 3))
+    params = {
+        # 4 gates (i, f, z, o) from input and per-head recurrent h
+        "w_x": make_param(ks[0], (d, 4, H, Dh), dt, fan_in=d),
+        "r_h": make_param(ks[1], (4, H, Dh, Dh), jnp.float32, fan_in=Dh),
+        "b": jnp.zeros((4, H, Dh), jnp.float32),
+        # post-block gated FFN (pf = 4/3 per the xLSTM paper)
+        "w_ff_up": make_param(ks[2], (d, 2 * ffd), dt),
+        "w_ff_down": make_param(ks[3], (ffd, d), dt, fan_in=ffd),
+    }
+    axes = {
+        "w_x": ("embed", None, "heads", "head_dim"),
+        "r_h": (None, "heads", "head_dim", None),
+        "b": (None, "heads", "head_dim"),
+        "w_ff_up": ("embed", "ff"),
+        "w_ff_down": ("ff", "embed"),
+    }
+    return params, axes
+
+
+def _slstm_step(p, carry, gx):
+    """gx: [B, 4, H, D] input contribution to the gates."""
+    h, c, n, m = carry
+    g = gx.astype(jnp.float32) + jnp.einsum("bhd,ghde->bghe", h, p["r_h"]) + p["b"]
+    gi, gf, gz, go = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+    # stabilised exponential gating (xLSTM eq. 15-17)
+    log_f = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(log_f + m, gi)
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(log_f + m - m_new)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return (h_new, c_new, n_new, m_new), h_new
+
+
+def apply_slstm(cfg: ArchConfig, p: Dict, x: jax.Array, state: SLSTMState | None = None):
+    """x: [B, S, d] -> ([B, S, d], final state). Sequential over S."""
+    B, S, d = x.shape
+    H, Dh = _slstm_dims(cfg)
+    gx = jnp.einsum("bsd,dghe->bsghe", x, p["w_x"])  # [B, S, 4, H, Dh]
+    if state is None:
+        state = init_slstm_state(cfg, B)
+    carry = (state.h, state.c, state.n, state.m)
+    carry, hs = jax.lax.scan(
+        lambda ca, g: _slstm_step(p, ca, g), carry, gx.swapaxes(0, 1)
+    )  # hs: [S, B, H, Dh]
+    y = hs.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype)
+    # gated FFN
+    u, g = jnp.split(y @ p["w_ff_up"], 2, axis=-1)
+    y = (u * jax.nn.gelu(g, approximate=True)) @ p["w_ff_down"]
+    return y, SLSTMState(*carry)
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int) -> SLSTMState:
+    H, Dh = _slstm_dims(cfg)
+    z = jnp.zeros((batch, H, Dh), jnp.float32)
+    return SLSTMState(z, z, z, z - 30.0)
+
+
+def slstm_decode(cfg: ArchConfig, p: Dict, x: jax.Array, state: SLSTMState):
+    return apply_slstm(cfg, p, x, state)

@@ -1,0 +1,456 @@
+"""Generic decoder stack: scans over repeating units of per-layer
+descriptors (configs/base.py::ArchConfig.pattern), so compile size is
+O(|unit|) for every assigned architecture — 88-layer granite lowers as a
+2-matrix scan body, jamba as one 8-layer hybrid unit, etc.
+
+Three entry points per architecture:
+  * forward()      — train / prefill (full sequence), optionally
+                     returning per-layer decode caches;
+  * decode_step()  — one token against the cache pytree;
+  * init_params()  — real weights (smoke tests); the dry-run shapes the
+                     same function with jax.eval_shape (no allocation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerDesc
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.layers import (
+    apply_mlp,
+    embed_tokens,
+    init_embed,
+    init_mlp,
+    init_norm,
+    pdtype,
+    rmsnorm,
+    sinusoidal,
+    unembed,
+)
+
+# Dry-run mode: unroll structural scans so compiled.cost_analysis() counts
+# every layer (XLA reports while-loop bodies once).  For deep stacks
+# (R > 32: granite 88, grok 64) only a partial unroll compiles in
+# reasonable time; launch/dryrun.py extrapolates loop-body costs linearly
+# from (scanned, partially-unrolled) compiles.  Never used at runtime.
+_DRYRUN_UNROLL = False
+
+
+def set_dryrun_unroll(value: bool) -> None:
+    global _DRYRUN_UNROLL
+    _DRYRUN_UNROLL = value
+
+
+def unroll_factor(length: int) -> int:
+    """Unroll chosen for a scan of ``length`` under dry-run mode."""
+    if length <= 32:
+        return length
+    for u in (8, 7, 6, 5, 4, 3, 2):
+        if length % u == 0:
+            return u
+    return 1
+
+
+def scan_unroll(length: int) -> int:
+    return unroll_factor(length) if _DRYRUN_UNROLL else 1
+
+
+# Optional override for the UNIT scan only (launch/dryrun.py cost
+# extrapolation compiles two partial unrolls and solves for the body).
+_UNIT_UNROLL: int | None = None
+
+
+def set_unit_unroll(value: int | None) -> None:
+    global _UNIT_UNROLL
+    _UNIT_UNROLL = value
+
+
+def unit_scan_unroll(length: int) -> int:
+    if _DRYRUN_UNROLL and _UNIT_UNROLL is not None:
+        return _UNIT_UNROLL
+    return scan_unroll(length)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+
+
+def _mixer_window(cfg: ArchConfig, desc: LayerDesc) -> Optional[int]:
+    return cfg.window if desc.mixer == "attn_local" else None
+
+
+def _use_rope(cfg: ArchConfig, desc: LayerDesc) -> bool:
+    # llama4 NoPE: the periodic global layers drop positional encoding
+    if cfg.layer_pattern == "chunked_global" and desc.mixer == "attn_full":
+        return False
+    return cfg.pos_emb == "rope"
+
+
+def init_layer(cfg: ArchConfig, desc: LayerDesc, key, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    params: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+
+    if desc.mixer.startswith("attn"):
+        params["mixer"], axes["mixer"] = attn.init_attn(cfg, ks[0])
+    elif desc.mixer == "mamba":
+        params["mixer"], axes["mixer"] = ssm.init_mamba(cfg, ks[0])
+    elif desc.mixer == "mlstm":
+        params["mixer"], axes["mixer"] = ssm.init_mlstm(cfg, ks[0])
+    elif desc.mixer == "slstm":
+        params["mixer"], axes["mixer"] = ssm.init_slstm(cfg, ks[0])
+    else:
+        raise ValueError(desc.mixer)
+    params["norm1"], axes["norm1"] = init_norm(cfg)
+
+    if cfg.post_norm:
+        params["post_norm1"], axes["post_norm1"] = init_norm(cfg)
+
+    if cross:  # whisper decoder cross-attention sublayer
+        params["cross"], axes["cross"] = attn.init_attn(cfg, ks[1], cross=True)
+        params["norm_cross"], axes["norm_cross"] = init_norm(cfg)
+
+    if desc.ffn == "moe":
+        params["ffn"], axes["ffn"] = moe_mod.init_moe(cfg, ks[2])
+        params["norm2"], axes["norm2"] = init_norm(cfg)
+    elif desc.ffn != "none":
+        params["ffn"], axes["ffn"] = init_mlp(cfg, ks[2])
+        params["norm2"], axes["norm2"] = init_norm(cfg)
+    if "norm2" in params and cfg.post_norm:
+        params["post_norm2"], axes["post_norm2"] = init_norm(cfg)
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# Full init
+# ---------------------------------------------------------------------------
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+
+
+def _stack_axes(axes_tree):
+    """Prefix the scan ('layers') axis onto every logical-axes tuple."""
+    return jax.tree.map(lambda ax: ("layers",) + tuple(ax), axes_tree, is_leaf=_is_axes_leaf)
+
+
+def _init_params_and_axes(cfg: ArchConfig, key) -> Tuple[Dict, Dict]:
+    """Build (params, logical-axes).  The axes tree is plain Python built
+    during tracing, so this function works both executed (real weights)
+    and under jax.eval_shape (dry-run — no allocation)."""
+    unit, R = cfg.pattern()
+    cross = cfg.arch_type == "audio"
+    k_embed, k_unit, k_final, k_enc = jax.random.split(key, 4)
+    del k_final
+
+    params: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+    params["embed"], axes["embed"] = init_embed(cfg, k_embed)
+
+    unit_axes: Dict[str, Any] = {}
+
+    def unit_init(k):
+        ks = jax.random.split(k, len(unit))
+        ps = {}
+        for i, desc in enumerate(unit):
+            ps[f"L{i}"], unit_axes[f"L{i}"] = init_layer(cfg, desc, ks[i], cross=cross)
+        return ps
+
+    params["unit"] = jax.vmap(unit_init)(jax.random.split(k_unit, R))
+    axes["unit"] = _stack_axes(unit_axes)
+    params["final_norm"], axes["final_norm"] = init_norm(cfg)
+
+    if cfg.arch_type == "audio":  # whisper encoder stack
+        enc_desc = LayerDesc("attn_full", "gelu")
+        enc_axes: Dict[str, Any] = {}
+
+        def enc_init(k):
+            ps, a = init_layer(cfg, enc_desc, k, cross=False)
+            enc_axes.update(a)
+            return ps
+
+        params["encoder"] = {
+            "unit": jax.vmap(enc_init)(jax.random.split(k_enc, cfg.encoder_layers))
+        }
+        axes["encoder"] = {"unit": _stack_axes(enc_axes)}
+        params["encoder"]["final_norm"], axes["encoder"]["final_norm"] = init_norm(cfg)
+
+    return params, axes
+
+
+def init_params(cfg: ArchConfig, key) -> Dict[str, Any]:
+    return _init_params_and_axes(cfg, key)[0]
+
+
+def shapes_and_axes(cfg: ArchConfig):
+    """(ShapeDtypeStruct tree, logical-axes tree) without allocating."""
+    holder: Dict[str, Any] = {}
+
+    def build(key):
+        p, a = _init_params_and_axes(cfg, key)
+        holder["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(build, jax.random.PRNGKey(0))
+    return shapes, holder["axes"]
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+class UnitCaches(NamedTuple):
+    """Per-unit-position decode caches, stacked over repeats by lax.scan."""
+
+    caches: Any  # dict L{i} -> LayerCache | MambaState | MLSTMState | SLSTMState
+
+
+def _apply_layer(
+    cfg: ArchConfig,
+    desc: LayerDesc,
+    lp: Dict,
+    x: jax.Array,
+    positions: jax.Array,
+    aux: jax.Array,
+    *,
+    enc_out: Optional[jax.Array] = None,
+    use_pallas: bool = False,
+    causal: bool = True,
+    collect_cache: bool = False,
+    cache_len: int = 0,
+):
+    cache = None
+    h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+    if desc.mixer.startswith("attn"):
+        out, (k, v) = attn.attend_full(
+            cfg,
+            lp["mixer"],
+            h,
+            positions,
+            causal=causal,
+            window=_mixer_window(cfg, desc),
+            use_rope=_use_rope(cfg, desc),
+            use_pallas=use_pallas,
+        )
+        if collect_cache:
+            w = _mixer_window(cfg, desc)
+            if w and k.shape[1] > w:
+                # ring alignment: slot = pos % w, valid because S % w == 0
+                assert k.shape[1] % w == 0, "window must divide prefill length"
+                k, v = k[:, -w:], v[:, -w:]
+            elif w and k.shape[1] < w:
+                pad = [(0, 0), (0, w - k.shape[1]), (0, 0), (0, 0)]
+                k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+            cache = attn.LayerCache(k, v)
+    elif desc.mixer == "mamba":
+        if collect_cache:
+            out, cache = ssm.mamba_prefill(cfg, lp["mixer"], h)
+        else:
+            out = ssm.apply_mamba(cfg, lp["mixer"], h)
+    elif desc.mixer == "mlstm":
+        out, st = ssm.apply_mlstm(cfg, lp["mixer"], h)
+        cache = st if collect_cache else None
+    elif desc.mixer == "slstm":
+        out, st = ssm.apply_slstm(cfg, lp["mixer"], h)
+        cache = st if collect_cache else None
+    else:
+        raise ValueError(desc.mixer)
+    if cfg.post_norm:
+        out = rmsnorm(out, lp["post_norm1"], cfg.norm_eps)
+    x = x + out
+
+    if enc_out is not None:  # cross-attention (whisper decoder)
+        h = rmsnorm(x, lp["norm_cross"], cfg.norm_eps)
+        out, (ck, cv) = attn.attend_full(
+            cfg, lp["cross"], h, positions, causal=False, use_rope=False,
+            use_pallas=use_pallas, kv_x=enc_out,
+        )
+        x = x + out
+        if collect_cache:
+            cache = (cache, attn.LayerCache(ck, cv))
+    elif cfg.arch_type == "audio" and collect_cache:
+        cache = (cache, None)
+
+    if desc.ffn != "none":
+        h = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        if desc.ffn == "moe":
+            out, a = moe_mod.apply_moe(cfg, lp["ffn"], h)
+            aux = aux + a
+        else:
+            out = apply_mlp(cfg, lp["ffn"], h)
+        if cfg.post_norm:
+            out = rmsnorm(out, lp["post_norm2"], cfg.norm_eps)
+        x = x + out
+    return x, aux, cache
+
+
+def _encode_audio(cfg: ArchConfig, params: Dict, frames: jax.Array, use_pallas: bool):
+    """Whisper encoder: frames [B, F, d] (post-conv stub) -> enc_out."""
+    F = frames.shape[1]
+    pos = jnp.arange(F)
+    x = frames + sinusoidal(pos, cfg.d_model)[None].astype(frames.dtype)
+    enc_desc = LayerDesc("attn_full", "gelu")
+
+    def body(x, lp):
+        x, _, _ = _apply_layer(
+            cfg, enc_desc, lp, x, pos, jnp.zeros((), jnp.float32),
+            causal=False, use_pallas=use_pallas,
+        )
+        return x, None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(fn, x, params["encoder"]["unit"], unroll=scan_unroll(cfg.encoder_layers))
+    return rmsnorm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def forward(
+    cfg: ArchConfig,
+    params: Dict,
+    tokens: jax.Array,  # [B, S]
+    *,
+    prefix: Optional[jax.Array] = None,  # [B, P, d] VLM patch embeddings
+    frames: Optional[jax.Array] = None,  # [B, F, d] whisper post-conv stub
+    use_pallas: bool = False,
+    collect_cache: bool = False,
+) -> Tuple[jax.Array, jax.Array, Optional[Any]]:
+    """Returns (final hidden [B, S_total, d], aux loss, caches or None)."""
+    unit, R = cfg.pattern()
+    x = embed_tokens(cfg, params["embed"], tokens)
+    if prefix is not None:
+        x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    if cfg.pos_emb == "sinusoidal":
+        x = x + sinusoidal(positions, cfg.d_model)[None].astype(x.dtype)
+
+    enc_out = None
+    if cfg.arch_type == "audio":
+        assert frames is not None, "audio arch requires frame embeddings"
+        enc_out = _encode_audio(cfg, params, frames, use_pallas)
+
+    def body(carry, uparams):
+        x, aux = carry
+        caches = {}
+        for i, desc in enumerate(unit):
+            x, aux, cache = _apply_layer(
+                cfg, desc, uparams[f"L{i}"], x, positions, aux,
+                enc_out=enc_out, use_pallas=use_pallas,
+                collect_cache=collect_cache,
+            )
+            if collect_cache:
+                caches[f"L{i}"] = cache
+        return (x, aux), (caches if collect_cache else None)
+
+    fn = jax.checkpoint(body) if (cfg.remat and not collect_cache) else body
+    (x, aux), caches = jax.lax.scan(
+        fn, (x, jnp.zeros((), jnp.float32)), params["unit"], unroll=unit_scan_unroll(R)
+    )
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux, caches
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token against the cache pytree)
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ArchConfig, batch: int, cache_len: int) -> Any:
+    """Zero decode state: dict L{i} -> cache, every leaf stacked [R, ...].
+
+    Attention layers get full caches of ``cache_len`` (local layers: ring
+    buffers of ``window``); SSM/recurrent layers get constant-size state.
+    Audio archs additionally carry read-only cross-attention caches of the
+    encoder sequence.
+    """
+    unit, R = cfg.pattern()
+    dt = pdtype(cfg)
+
+    def one(desc: LayerDesc):
+        if desc.mixer.startswith("attn"):
+            c = attn.init_cache(cfg, batch, cache_len, _mixer_window(cfg, desc), dt)
+        elif desc.mixer == "mamba":
+            c = ssm.init_mamba_state(cfg, batch, dt)
+        elif desc.mixer == "mlstm":
+            c = ssm.init_mlstm_state(cfg, batch)
+        elif desc.mixer == "slstm":
+            c = ssm.init_slstm_state(cfg, batch)
+        else:
+            raise ValueError(desc.mixer)
+        if cfg.arch_type == "audio":
+            cross = attn.init_cache(cfg, batch, cfg.encoder_seq, None, dt)
+            return (c, cross)
+        return c
+
+    per_unit = {f"L{i}": one(desc) for i, desc in enumerate(unit)}
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (R,) + x.shape), per_unit)
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: Dict,
+    caches: Any,
+    token: jax.Array,  # [B, 1] i32
+    pos: jax.Array,  # scalar i32 — absolute position of this token
+) -> Tuple[jax.Array, Any]:
+    """One serving step: returns (logits [B, V], new caches)."""
+    unit, R = cfg.pattern()
+    x = embed_tokens(cfg, params["embed"], token)  # [B, 1, d]
+    if cfg.pos_emb == "sinusoidal":
+        x = x + sinusoidal(pos[None], cfg.d_model)[None].astype(x.dtype)
+
+    def body(x, scanned):
+        uparams, ucaches = scanned
+        new_caches = {}
+        for i, desc in enumerate(unit):
+            lp = uparams[f"L{i}"]
+            c = ucaches[f"L{i}"]
+            self_c, cross_c = c if cfg.arch_type == "audio" else (c, None)
+            h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+            w = _mixer_window(cfg, desc)
+            if desc.mixer.startswith("attn"):
+                out, self_c = attn.attend_decode(
+                    cfg, lp["mixer"], h, self_c, pos,
+                    window=w, use_rope=_use_rope(cfg, desc),
+                )
+            elif desc.mixer == "mamba":
+                out, self_c = ssm.mamba_decode(cfg, lp["mixer"], h, self_c)
+            elif desc.mixer == "mlstm":
+                out, self_c = ssm.mlstm_decode(cfg, lp["mixer"], h, self_c)
+            elif desc.mixer == "slstm":
+                out, self_c = ssm.slstm_decode(cfg, lp["mixer"], h, self_c)
+            if cfg.post_norm:
+                out = rmsnorm(out, lp["post_norm1"], cfg.norm_eps)
+            x = x + out
+            if cross_c is not None:
+                h = rmsnorm(x, lp["norm_cross"], cfg.norm_eps)
+                out, _ = attn.attend_decode(
+                    cfg, lp["cross"], h, cross_c, pos, use_rope=False, cross=True
+                )
+                x = x + out
+            if desc.ffn != "none":
+                h = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+                if desc.ffn == "moe":
+                    out, _ = moe_mod.apply_moe(cfg, lp["ffn"], h)
+                else:
+                    out = apply_mlp(cfg, lp["ffn"], h)
+                if cfg.post_norm:
+                    out = rmsnorm(out, lp["post_norm2"], cfg.norm_eps)
+                x = x + out
+            new_caches[f"L{i}"] = (self_c, cross_c) if cfg.arch_type == "audio" else self_c
+        return x, new_caches
+
+    x, new_caches = jax.lax.scan(
+        body, x, (params["unit"], caches), unroll=unit_scan_unroll(R)
+    )
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(cfg, params["embed"], x)  # [B, 1, V]
+    return logits[:, 0, :], new_caches

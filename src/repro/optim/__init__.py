@@ -1,0 +1,1 @@
+from repro.optim.optimizers import AdamWConfig, AdamWState, adamw_update, init_adamw

@@ -1,0 +1,160 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory     = HLO_bytes_per_device / HBM_bandwidth
+  collective = per-device collective bytes (parsed from the post-SPMD
+               HLO text) / ICI link bandwidth
+
+cost_analysis() on the SPMD executable reports the PER-DEVICE program
+(XLA compiles one partition), so no further division by chip count is
+needed; the brief's ``X / (chips * peak)`` with module-total X is the
+same quantity.
+
+Collective bytes-on-wire factors (ring algorithms, n = group size):
+  all-reduce          2 (n-1)/n * result_bytes
+  all-gather            (n-1)/n * result_bytes   (result = gathered)
+  reduce-scatter        (n-1)   * result_bytes   (result = shard)
+  all-to-all            (n-1)/n * result_bytes
+  collective-permute    1       * result_bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Tuple
+
+# TPU v5e per chip (brief-provided constants)
+PEAK_FLOPS = 197e12  # bf16 FLOP/s
+HBM_BW = 819e9  # bytes/s
+LINK_BW = 50e9  # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<result>\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<suffix>-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(result: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(result):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # [G,S]<=[N]: G groups of size S
+        return int(m.group(2))
+    return default
+
+
+_WIRE_FACTORS = {
+    "all-reduce": lambda n: 2 * (n - 1) / max(n, 1),
+    "all-gather": lambda n: (n - 1) / max(n, 1),
+    "reduce-scatter": lambda n: float(n - 1),
+    "all-to-all": lambda n: (n - 1) / max(n, 1),
+    "collective-permute": lambda n: 1.0,
+}
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    ops: Dict[str, int]
+    raw_bytes: Dict[str, int]  # sum of result bytes per op kind
+    wire_bytes: float  # factor-adjusted per-device bytes on the wire
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"ops": self.ops, "raw_bytes": self.raw_bytes, "wire_bytes": self.wire_bytes}
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    ops: Dict[str, int] = {}
+    raw: Dict[str, int] = {}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or m.group("suffix") == "-done":
+            continue
+        op = m.group("op")
+        b = _shape_bytes(m.group("result"))
+        n = _group_size(line, n_devices)
+        ops[op] = ops.get(op, 0) + 1
+        raw[op] = raw.get(op, 0) + b
+        wire += _WIRE_FACTORS[op](n) * b
+    return CollectiveStats(ops, raw, wire)
+
+
+def roofline_terms(
+    flops: float, bytes_accessed: float, wire_bytes: float
+) -> Dict[str, float]:
+    compute = flops / PEAK_FLOPS
+    memory = bytes_accessed / HBM_BW
+    collective = wire_bytes / LINK_BW
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    terms["bottleneck"] = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k]
+    )
+    return terms
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE)
+# ---------------------------------------------------------------------------
+
+
+def param_counts(cfg, shapes, axes) -> Tuple[int, int]:
+    """(total params, active params per token) from the shape tree."""
+    import jax
+
+    def is_axes_leaf(x):
+        return isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+
+    flat_s = jax.tree.leaves(shapes)
+    flat_a = jax.tree.flatten(axes, is_leaf=is_axes_leaf)[0]
+    total = sum(int(__import__("numpy").prod(s.shape)) for s in flat_s)
+    expert = sum(
+        int(__import__("numpy").prod(s.shape))
+        for s, a in zip(flat_s, flat_a)
+        if "experts" in a
+    )
+    if cfg.is_moe and cfg.n_experts > 0:
+        active = total - expert + expert * cfg.experts_per_token // cfg.n_experts
+    else:
+        active = total
+    return total, active
+
+
+def model_flops(cfg, shapes, axes, shape) -> float:
+    """6 * N_active * D with D = tokens processed by the lowered step."""
+    _, active = param_counts(cfg, shapes, axes)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens  # forward only
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * active * tokens

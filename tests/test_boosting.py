@@ -1,0 +1,126 @@
+"""Unit + integration tests for the model-agnostic boosting core."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import boosting
+from repro.core.metrics import f1_macro
+from repro.data import get_dataset
+from repro.fl.partition import dirichlet_partition, iid_partition
+from repro.learners import LearnerSpec, get_learner
+
+
+@pytest.fixture(scope="module")
+def vehicle():
+    key = jax.random.PRNGKey(0)
+    dspec, data = get_dataset("vehicle", key)
+    lspec = LearnerSpec("decision_tree", dspec.n_features, dspec.n_classes,
+                        {"depth": 4, "n_bins": 16})
+    return dspec, lspec, data
+
+
+def _setup(data, C=4, T=8, seed=1):
+    Xtr, ytr, Xte, yte = data
+    Xs, ys, masks = iid_partition(Xtr, ytr, C, jax.random.PRNGKey(seed))
+    return Xs, ys, masks, Xte, yte
+
+
+def test_round_invariants(vehicle):
+    dspec, lspec, data = vehicle
+    learner = get_learner("decision_tree")
+    Xs, ys, masks, Xte, yte = _setup(data)
+    state = boosting.init_boost_state(learner, lspec, 8, masks, jax.random.PRNGKey(2))
+    # initial weights: uniform over the GLOBAL dataset
+    np.testing.assert_allclose(float(jnp.sum(state.weights)), 1.0, rtol=1e-5)
+    for t in range(3):
+        state, m = jax.jit(
+            lambda s: boosting.adaboost_f_round(learner, lspec, s, Xs, ys, masks)
+        )(state)
+        # weights stay a distribution after every round (norm exchange)
+        np.testing.assert_allclose(float(jnp.sum(state.weights)), 1.0, rtol=1e-4)
+        assert float(jnp.min(state.weights)) >= 0.0
+        assert int(state.ensemble.count) == t + 1
+        assert 0.0 < float(m["epsilon"]) < 1.0
+
+
+def test_boosting_beats_single_learner(vehicle):
+    dspec, lspec, data = vehicle
+    learner = get_learner("decision_tree")
+    Xs, ys, masks, Xte, yte = _setup(data, T=10)
+    state = boosting.init_boost_state(learner, lspec, 10, masks, jax.random.PRNGKey(3))
+    rfn = jax.jit(lambda s: boosting.adaboost_f_round(learner, lspec, s, Xs, ys, masks))
+    for _ in range(10):
+        state, _ = rfn(state)
+    pred = boosting.strong_predict(learner, lspec, state.ensemble, Xte)
+    f1_ens = float(f1_macro(yte, pred, lspec.n_classes))
+
+    w = jnp.ones(data[1].shape, jnp.float32)
+    single = learner.fit(lspec, None, data[0], data[1], w, jax.random.PRNGKey(4))
+    f1_single = float(f1_macro(yte, learner.predict(lspec, single, Xte), lspec.n_classes))
+    assert f1_ens > f1_single - 0.02, (f1_ens, f1_single)
+
+
+def test_misprediction_upweighting(vehicle):
+    """After a round, mispredicted samples must carry more weight."""
+    dspec, lspec, data = vehicle
+    learner = get_learner("decision_tree")
+    Xs, ys, masks, *_ = _setup(data)
+    state = boosting.init_boost_state(learner, lspec, 4, masks, jax.random.PRNGKey(5))
+    w_before = state.weights
+    state, m = boosting.adaboost_f_round(learner, lspec, state, Xs, ys, masks)
+    chosen = jax.tree.map(lambda x: x[int(state.ensemble.count) - 1], state.ensemble.params)
+    mis = jax.vmap(lambda X, y: (learner.predict(lspec, chosen, X) != y))(Xs, ys)
+    ratio = state.weights / jnp.maximum(w_before, 1e-30)
+    if float(m["alpha"]) > 0:
+        assert float(jnp.min(jnp.where(mis, ratio, jnp.inf))) >= float(
+            jnp.max(jnp.where(~mis, ratio, -jnp.inf))
+        ) - 1e-6
+
+
+@pytest.mark.parametrize("alg", ["distboost_f", "bagging"])
+def test_other_algorithms_run(vehicle, alg):
+    dspec, lspec, data = vehicle
+    learner = get_learner("decision_tree")
+    Xs, ys, masks, Xte, yte = _setup(data)
+    committee = Xs.shape[0] if alg == "distboost_f" else None
+    state = boosting.init_boost_state(
+        learner, lspec, 5, masks, jax.random.PRNGKey(6), committee_size=committee
+    )
+    rfn = jax.jit(lambda s: boosting.ROUND_FNS[alg](learner, lspec, s, Xs, ys, masks))
+    for _ in range(5):
+        state, m = rfn(state)
+    pred = boosting.strong_predict(
+        learner, lspec, state.ensemble, Xte, committee=(alg == "distboost_f")
+    )
+    f1 = float(f1_macro(yte, pred, lspec.n_classes))
+    assert f1 > 0.5, f1
+
+
+def test_preweak_selects_from_fixed_space(vehicle):
+    dspec, lspec, data = vehicle
+    learner = get_learner("decision_tree")
+    Xs, ys, masks, Xte, yte = _setup(data)
+    T = 4
+    state = boosting.init_boost_state(learner, lspec, T, masks, jax.random.PRNGKey(7))
+    hyp_space, state = boosting.preweak_f_setup(learner, lspec, state, Xs, ys, masks, T)
+    n_hyp = jax.tree.leaves(hyp_space)[0].shape[0]
+    assert n_hyp == Xs.shape[0] * T  # C x T hypothesis space
+    for _ in range(T):
+        state, m = boosting.preweak_f_round(learner, lspec, state, hyp_space, Xs, ys, masks)
+        assert 0 <= int(m["chosen"]) < n_hyp
+
+
+def test_dirichlet_noniid_still_learns(vehicle):
+    dspec, lspec, data = vehicle
+    learner = get_learner("decision_tree")
+    Xtr, ytr, Xte, yte = data
+    Xs, ys, masks = dirichlet_partition(
+        Xtr, ytr, 4, jax.random.PRNGKey(8), alpha=0.3, n_classes=dspec.n_classes
+    )
+    state = boosting.init_boost_state(learner, lspec, 10, masks, jax.random.PRNGKey(9))
+    rfn = jax.jit(lambda s: boosting.adaboost_f_round(learner, lspec, s, Xs, ys, masks))
+    for _ in range(10):
+        state, _ = rfn(state)
+    pred = boosting.strong_predict(learner, lspec, state.ensemble, Xte)
+    assert float(f1_macro(yte, pred, lspec.n_classes)) > 0.5

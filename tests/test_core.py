@@ -1,0 +1,149 @@
+"""Framework substrate: TensorDB, serialization, Plan, protocol barriers."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.plan import (
+    OptimizationFlags,
+    Plan,
+    RolePlan,
+    TaskSpec,
+    adaboost_plan,
+    bagging_plan,
+    fedavg_plan,
+    plan_from_dict,
+    plan_to_dict,
+)
+from repro.core.protocol import SynchBarrier
+from repro.core.serialization import (
+    deserialize,
+    roundtrip_equal,
+    serialize,
+    wire_format,
+    wire_size,
+)
+from repro.core.tensordb import TensorDB, TensorKey
+
+
+# -- TensorDB ----------------------------------------------------------------
+
+
+def test_tensordb_bounded_retention():
+    db = TensorDB(retention=2)
+    for r in range(10):
+        db.put(TensorKey("weak_hypothesis", "collaborator_0", r), {"r": r})
+    rounds = {k.round for k, _ in db.query(name="weak_hypothesis")}
+    assert rounds == {8, 9}  # only the last two rounds survive (paper fix)
+    assert db.peak_entries <= 3
+
+
+def test_tensordb_unbounded_grows():
+    db = TensorDB(retention=None)
+    for r in range(10):
+        db.put(TensorKey("m", "aggregator", r), r)
+    assert len(db) == 10
+
+
+def test_tensordb_query_filters():
+    db = TensorDB()
+    db.put(TensorKey("h", "collaborator_0", 1, ("trained",)), "a")
+    db.put(TensorKey("h", "collaborator_1", 1, ("trained",)), "b")
+    db.put(TensorKey("h", "collaborator_0", 2, ("trained",)), "c")
+    assert len(db.query(name="h", round=1)) == 2
+    assert db.query(origin="collaborator_1")[0][1] == "b"
+    assert db.query(tags=("trained",), round=2)[0][1] == "c"
+
+
+# -- serialization ------------------------------------------------------------
+
+
+@pytest.mark.parametrize("packed", [True, False])
+def test_roundtrip_model_pytree(packed):
+    tree = {
+        "feature": jnp.arange(4, dtype=jnp.int32),
+        "threshold": jnp.linspace(0, 1, 4),
+        "leaf": {"logits": jnp.ones((16, 3), jnp.float32)},
+    }
+    assert roundtrip_equal(tree, packed=packed)
+
+
+def test_packed_is_single_buffer():
+    tree = {"a": jnp.ones((8,)), "b": jnp.zeros((4, 4), jnp.int32)}
+    assert len(serialize(tree, packed=True)) == 1
+    assert len(serialize(tree, packed=False)) == 2
+    assert wire_size(tree) == 8 * 4 + 16 * 4
+
+
+def test_wire_format_restores_dtypes():
+    tree = {"x": jnp.ones((3,), jnp.bfloat16)}
+    fmt = wire_format(tree)
+    back = deserialize(serialize(tree), fmt)
+    assert str(np.asarray(back["x"]).dtype) == "bfloat16"
+
+
+# -- Plan ----------------------------------------------------------------------
+
+
+def test_default_plans_validate():
+    for p in (adaboost_plan(), bagging_plan(), fedavg_plan()):
+        p.validate()
+
+
+def test_plan_rejects_bad_task_order():
+    tasks = [
+        TaskSpec("adaboost_update", "adaboost_update"),
+        TaskSpec("weak_learners_validate", "weak_learners_validate"),
+    ]
+    with pytest.raises(ValueError, match="must follow"):
+        Plan(RolePlan(), RolePlan(), tasks, "adaboost_f").validate()
+
+
+def test_plan_rejects_unknown_task():
+    with pytest.raises(ValueError, match="unknown task"):
+        Plan(RolePlan(), RolePlan(), [TaskSpec("x", "not_a_task")], "adaboost_f").validate()
+
+
+def test_plan_bagging_must_omit_update():
+    tasks = [
+        TaskSpec("train", "train"),
+        TaskSpec("weak_learners_validate", "weak_learners_validate"),
+        TaskSpec("adaboost_update", "adaboost_update"),
+    ]
+    with pytest.raises(ValueError, match="OMITTING"):
+        Plan(RolePlan(), RolePlan(), tasks, "bagging").validate()
+
+
+def test_plan_nn_flag_gates_workflows():
+    p = adaboost_plan()
+    bad = dataclasses.replace(p, aggregator=dataclasses.replace(p.aggregator, nn=True))
+    with pytest.raises(ValueError, match="nn: False"):
+        bad.validate()
+
+
+def test_plan_dict_roundtrip():
+    p = adaboost_plan(rounds=7)
+    p2 = plan_from_dict(plan_to_dict(p))
+    assert p2.aggregator.rounds == 7
+    assert [t.kind for t in p2.tasks] == [t.kind for t in p.tasks]
+
+
+# -- barrier --------------------------------------------------------------------
+
+
+def test_structural_barrier_is_free():
+    b = SynchBarrier(8, sleep_s=10.0, structural=True)
+    for _ in range(8):
+        b.report_done()
+    b.wait_all()
+    assert b.waited_seconds == 0.0
+
+
+def test_polling_barrier_pays_sleep():
+    b = SynchBarrier(2, sleep_s=0.01, structural=False)
+    for _ in range(2):
+        b.report_done()
+    b.wait_all()
+    assert b.waited_seconds >= 0.01

@@ -1,0 +1,91 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs the
+pure-jnp oracle in kernels/ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.boost_update import weight_update, weighted_errors
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.tree_hist import tree_hist
+
+
+@pytest.mark.parametrize("n,d,L,B1,K", [
+    (257, 5, 2, 9, 2),      # non-divisible n/d (padding paths)
+    (1024, 14, 8, 17, 3),
+    (512, 54, 16, 17, 7),
+])
+def test_tree_hist_sweep(n, d, L, B1, K):
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    bin_idx = jax.random.randint(k1, (n, d), 0, B1)
+    leaf = jax.random.randint(k2, (n,), 0, L)
+    wy = jax.random.uniform(k3, (n, K))
+    got = tree_hist(bin_idx, leaf, wy, n_leaves=L, n_bins_p1=B1,
+                    block_s=128, block_d=4, interpret=True)
+    want = ref.tree_hist_ref(bin_idx, leaf, wy, L, B1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@pytest.mark.parametrize("H,n", [(3, 100), (8, 1000), (33, 4096)])
+def test_weighted_errors_sweep(H, n):
+    key = jax.random.PRNGKey(1)
+    k1, k2, k3 = jax.random.split(key, 3)
+    preds = jax.random.randint(k1, (H, n), 0, 5)
+    y = jax.random.randint(k2, (n,), 0, 5)
+    w = jax.random.uniform(k3, (n,))
+    got = weighted_errors(preds, y, w, block_h=4, block_s=256, interpret=True)
+    want = ref.weighted_errors_ref(preds, y, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4)
+
+
+@pytest.mark.parametrize("n,alpha", [(100, 0.5), (4097, 2.0), (64, -1.0)])
+def test_weight_update_sweep(n, alpha):
+    key = jax.random.PRNGKey(2)
+    w = jax.random.uniform(key, (n,))
+    mis = jax.random.bernoulli(key, 0.4, (n,)).astype(jnp.float32)
+    mask = (jnp.arange(n) < n - 3).astype(jnp.float32)
+    got = weight_update(w, mis, mask, jnp.float32(alpha), block_s=128, interpret=True)
+    want = ref.boost_weight_update_ref(w, mis, mask, jnp.float32(alpha))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,S,T,D,causal,window,softcap,dtype",
+    [
+        (2, 4, 2, 128, 128, 64, True, None, None, jnp.float32),
+        (1, 4, 1, 128, 128, 64, True, 64, None, jnp.float32),   # MQA + window
+        (1, 2, 2, 96, 160, 32, True, None, 30.0, jnp.float32),  # S<T + softcap
+        (1, 2, 2, 128, 128, 64, False, None, None, jnp.float32),  # encoder
+        (1, 8, 2, 128, 128, 128, True, None, None, jnp.bfloat16),  # bf16
+        (1, 2, 2, 100, 100, 64, True, None, None, jnp.float32),  # pad seq
+    ],
+)
+def test_flash_attention_sweep(B, Hq, Hkv, S, T, D, causal, window, softcap, dtype):
+    key = jax.random.PRNGKey(3)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (B, Hq, S, D), dtype)
+    k = jax.random.normal(k2, (B, Hkv, T, D), dtype)
+    v = jax.random.normal(k3, (B, Hkv, T, D), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window, softcap=softcap,
+                          block_q=64, block_k=64, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window, softcap=softcap)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=atol
+    )
+
+
+def test_flash_attention_fully_masked_rows_are_safe():
+    """Window smaller than block: early KV blocks fully masked for some
+    rows must not produce NaNs (the m=-inf guard)."""
+    key = jax.random.PRNGKey(4)
+    q = jax.random.normal(key, (1, 2, 256, 32))
+    k = jax.random.normal(key, (1, 2, 256, 32))
+    v = jax.random.normal(key, (1, 2, 256, 32))
+    got = flash_attention(q, k, v, causal=True, window=16, block_q=64, block_k=64,
+                          interpret=True)
+    assert np.all(np.isfinite(np.asarray(got)))
+    want = ref.attention_ref(q, k, v, causal=True, window=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)

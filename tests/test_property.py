@@ -1,0 +1,134 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.metrics import f1_macro
+from repro.core.serialization import deserialize, serialize, wire_format, wire_size
+from repro.fl.partition import dirichlet_partition, iid_partition
+from repro.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# -- serialization is lossless for arbitrary pytrees --------------------------
+
+
+@given(
+    shapes=st.lists(
+        st.lists(st.integers(1, 7), min_size=0, max_size=3), min_size=1, max_size=5
+    ),
+    packed=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_serialization_roundtrip(shapes, packed, seed):
+    rng = np.random.default_rng(seed)
+    tree = {
+        f"leaf{i}": rng.standard_normal(tuple(s)).astype(
+            [np.float32, np.int32, np.float64][i % 3]
+        )
+        for i, s in enumerate(shapes)
+    }
+    fmt = wire_format(tree)
+    back = deserialize(serialize(tree, packed), fmt, packed)
+    for k in tree:
+        np.testing.assert_array_equal(tree[k], np.asarray(back[k]))
+    assert wire_size(tree) == sum(v.nbytes for v in tree.values())
+
+
+# -- AdaBoost weight update invariants ----------------------------------------
+
+
+@given(
+    n=st.integers(2, 200),
+    alpha=st.floats(-5.0, 5.0, allow_nan=False),
+    seed=st.integers(0, 2**16),
+)
+def test_weight_update_preserves_nonnegativity_and_mask(n, alpha, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.random(n), jnp.float32)
+    mis = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+    out = ref.boost_weight_update_ref(w, mis, mask, jnp.float32(alpha))
+    out = np.asarray(out)
+    assert (out >= 0).all()
+    assert (out[np.asarray(mask) == 0] == 0).all()
+    # correctly-predicted kept samples are scaled by exactly 1
+    keep = (np.asarray(mask) == 1) & (np.asarray(mis) == 0)
+    np.testing.assert_allclose(out[keep], np.asarray(w)[keep], rtol=1e-6)
+
+
+# -- error matrix bounds --------------------------------------------------------
+
+
+@given(
+    n=st.integers(1, 100), H=st.integers(1, 8), K=st.integers(2, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_weighted_errors_bounded_by_weight_norm(n, H, K, seed):
+    rng = np.random.default_rng(seed)
+    preds = jnp.asarray(rng.integers(0, K, (H, n)), jnp.int32)
+    y = jnp.asarray(rng.integers(0, K, n), jnp.int32)
+    w = jnp.asarray(rng.random(n), jnp.float32)
+    eps = np.asarray(ref.weighted_errors_ref(preds, y, w))
+    assert (eps >= -1e-5).all()
+    assert (eps <= float(jnp.sum(w)) + 1e-3).all()
+
+
+# -- partitioners preserve the sample multiset ----------------------------------
+
+
+@given(
+    n=st.integers(20, 300), C=st.integers(2, 8), K=st.integers(2, 5),
+    seed=st.integers(0, 2**16), dirichlet=st.booleans(),
+)
+def test_partition_preserves_samples(n, C, K, seed, dirichlet):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.standard_normal((n, 3)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, K, n), jnp.int32)
+    key = jax.random.PRNGKey(seed)
+    if dirichlet:
+        Xs, ys, mask = dirichlet_partition(X, y, C, key, alpha=0.7, n_classes=K)
+        assert int(jnp.sum(mask)) == n  # nothing lost, nothing duplicated
+    else:
+        Xs, ys, mask = iid_partition(X, y, C, key)
+        assert int(jnp.sum(mask)) == (n // C) * C
+    # every unmasked row exists in the original data
+    flatX = np.asarray(Xs.reshape(-1, 3))
+    flatm = np.asarray(mask.reshape(-1))
+    orig = {tuple(np.round(row, 5)) for row in np.asarray(X)}
+    for row, m in zip(flatX, flatm):
+        if m:
+            assert tuple(np.round(row, 5)) in orig
+
+
+# -- metrics -----------------------------------------------------------------
+
+
+@given(
+    n=st.integers(1, 200), K=st.integers(2, 10), seed=st.integers(0, 2**16)
+)
+def test_f1_bounds_and_perfection(n, K, seed):
+    rng = np.random.default_rng(seed)
+    y = jnp.asarray(rng.integers(0, K, n), jnp.int32)
+    yp = jnp.asarray(rng.integers(0, K, n), jnp.int32)
+    f1 = float(f1_macro(y, yp, K))
+    assert -1e-6 <= f1 <= 1.0 + 1e-6
+    assert abs(float(f1_macro(y, y, K)) - 1.0) < 1e-6
+
+
+# -- attention oracle invariances ------------------------------------------------
+
+
+@given(seed=st.integers(0, 2**16), window=st.sampled_from([None, 8, 32]))
+def test_attention_rows_are_convex_combinations(seed, window):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((1, 2, 16, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 16, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 16, 8)), jnp.float32)
+    out = np.asarray(ref.attention_ref(q, k, v, causal=True, window=window))
+    vmin = np.asarray(v).min(axis=2, keepdims=True)
+    vmax = np.asarray(v).max(axis=2, keepdims=True)
+    assert (out >= vmin - 1e-4).all() and (out <= vmax + 1e-4).all()

@@ -1,0 +1,68 @@
+"""SPMD (shard_map) MAFL round: multi-device equivalence with the
+single-host fused round.  Runs in a subprocess so the 8-device
+XLA_FLAGS setting never leaks into other tests (the dry-run owns the
+512-device setting; everything else sees 1 device).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import boosting
+    from repro.core.metrics import f1_macro
+    from repro.fl.sharded import sharded_adaboost_round, sharded_strong_predict
+    from repro.learners import LearnerSpec, get_learner
+    from repro.data import get_dataset
+    from repro.fl.partition import iid_partition
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    key = jax.random.PRNGKey(0)
+    spec_d, (Xtr, ytr, Xte, yte) = get_dataset("vehicle", key)
+    Xs, ys, masks = iid_partition(Xtr, ytr, 4, jax.random.PRNGKey(1))
+    lspec = LearnerSpec("decision_tree", spec_d.n_features, spec_d.n_classes, {"depth": 4})
+    learner = get_learner("decision_tree")
+    T = 6
+    with jax.set_mesh(mesh):
+        state = boosting.init_boost_state(learner, lspec, T, masks, jax.random.PRNGKey(2))
+        rfn = jax.jit(lambda s, X, y, m: sharded_adaboost_round(learner, lspec, mesh, s, X, y, m))
+        for _ in range(T):
+            state, metrics = rfn(state, Xs, ys, masks)
+        n = Xte.shape[0] - Xte.shape[0] % 4
+        pred = sharded_strong_predict(learner, lspec, mesh, state.ensemble, Xte[:n])
+    f1_sharded = float(f1_macro(yte[:n], pred, lspec.n_classes))
+
+    state2 = boosting.init_boost_state(learner, lspec, T, masks, jax.random.PRNGKey(2))
+    host_fn = jax.jit(lambda s, X, y, m: boosting.adaboost_f_round(learner, lspec, s, X, y, m))
+    for _ in range(T):
+        state2, _ = host_fn(state2, Xs, ys, masks)
+    pred2 = boosting.strong_predict(learner, lspec, state2.ensemble, Xte[:n])
+    f1_host = float(f1_macro(yte[:n], pred2, lspec.n_classes))
+
+    assert abs(f1_sharded - f1_host) < 1e-6, (f1_sharded, f1_host)
+    # weights identical too (protocol equivalence, not just outcome)
+    np.testing.assert_allclose(
+        np.asarray(state.weights), np.asarray(state2.weights), rtol=1e-4, atol=1e-9
+    )
+    print("SHARDED_OK", f1_sharded)
+    """
+)
+
+
+def test_sharded_round_matches_host():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(SRC)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env, capture_output=True, text=True,
+        timeout=1200,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SHARDED_OK" in proc.stdout

@@ -1,0 +1,108 @@
+"""System-level tests: dry-run machinery (sharding resolution, roofline
+parser, input specs) on the host, without the 512-device setting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import roofline
+from repro.configs import INPUT_SHAPES, all_archs, get_arch
+from repro.models import model as M
+from repro.models import shardings
+from repro.models.transformer import shapes_and_axes
+
+
+# -- roofline HLO parsing -------------------------------------------------------
+
+SAMPLE_HLO = """
+  %ar = f32[512,2048]{1,0} all-reduce(f32[512,2048]{1,0} %x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag.1 = bf16[64,1024]{1,0} all-gather(bf16[4,1024]{1,0} %y), replica_groups=[16,16]<=[256], dimensions={0}
+  %rs = f32[32]{0} reduce-scatter(f32[128]{0} %z), replica_groups={{0,1,2,3}}, to_apply=%add
+  %cp-start = f32[8]{0} collective-permute-start(f32[8]{0} %w), source_target_pairs={{0,1}}
+  %done = f32[8]{0} collective-permute-done(f32[8]{0} %cp-start)
+  %a2a = (f32[16]{0}, f32[16]{0}) all-to-all(f32[16]{0} %p, f32[16]{0} %q), replica_groups={{0,1}}
+"""
+
+
+def test_collective_parser_counts_and_bytes():
+    stats = roofline.parse_collectives(SAMPLE_HLO, n_devices=256)
+    assert stats.ops == {
+        "all-reduce": 1, "all-gather": 1, "reduce-scatter": 1,
+        "collective-permute": 1, "all-to-all": 1,
+    }
+    assert stats.raw_bytes["all-reduce"] == 512 * 2048 * 4
+    assert stats.raw_bytes["all-gather"] == 64 * 1024 * 2
+    assert stats.raw_bytes["all-to-all"] == 2 * 16 * 4
+    # all-reduce over groups of 4: factor 2*(3/4)
+    ar_wire = 2 * 3 / 4 * 512 * 2048 * 4
+    assert stats.wire_bytes > ar_wire  # plus the others
+
+
+def test_roofline_terms_pick_bottleneck():
+    t = roofline.roofline_terms(flops=1e15, bytes_accessed=1e9, wire_bytes=1e9)
+    assert t["bottleneck"] == "compute_s"
+    t = roofline.roofline_terms(flops=1e12, bytes_accessed=1e13, wire_bytes=1e9)
+    assert t["bottleneck"] == "memory_s"
+    t = roofline.roofline_terms(flops=1e12, bytes_accessed=1e9, wire_bytes=1e12)
+    assert t["bottleneck"] == "collective_s"
+
+
+# -- sharding resolution ----------------------------------------------------------
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+@pytest.mark.parametrize("name", sorted(all_archs()))
+def test_param_specs_resolve_for_all_archs(name):
+    cfg = get_arch(name)
+    shapes, axes = shapes_and_axes(cfg)
+    mesh = FakeMesh({"data": 16, "model": 16})
+    specs = shardings.param_specs(cfg, shapes, axes, mesh)
+    flat_shapes = jax.tree.leaves(shapes)
+    flat_specs = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_shapes) == len(flat_specs)
+    for s, spec in zip(flat_shapes, flat_specs):
+        assert len(spec) <= len(s.shape)
+        for dim, ax in zip(s.shape, tuple(spec) + (None,) * len(s.shape)):
+            if ax in ("model", "data"):
+                assert dim % 16 == 0, (name, s.shape, spec)
+
+
+def test_fsdp_archs_shard_over_data():
+    cfg = get_arch("grok-1-314b")
+    shapes, axes = shapes_and_axes(cfg)
+    mesh = FakeMesh({"data": 16, "model": 16})
+    specs = shardings.param_specs(cfg, shapes, axes, mesh)
+    flat = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert any("data" in [a for a in spec if isinstance(a, str)] for spec in flat)
+
+
+def test_param_counts_moe_active():
+    cfg = get_arch("grok-1-314b")
+    shapes, axes = shapes_and_axes(cfg)
+    total, active = roofline.param_counts(cfg, shapes, axes)
+    assert 2.8e11 < total < 3.6e11, total  # ~314B
+    assert active < total * 0.45  # top-2 of 8 experts
+
+
+def test_input_specs_decode_state_shapes():
+    cfg = get_arch("gemma2-27b")
+    shape = INPUT_SHAPES["long_500k"]
+    specs = M.input_specs(cfg, shape)
+    leaves = jax.tree.leaves(specs["state"])
+    # local layers hold ring buffers of `window`, globals the full 512k
+    sizes = {l.shape[2] for l in leaves if hasattr(l, "shape") and len(l.shape) == 5}
+    assert cfg.window in sizes and shape.seq_len in sizes
+
+
+def test_model_flops_kinds():
+    cfg = get_arch("stablelm-3b")
+    shapes, axes = shapes_and_axes(cfg)
+    tr = roofline.model_flops(cfg, shapes, axes, INPUT_SHAPES["train_4k"])
+    pf = roofline.model_flops(cfg, shapes, axes, INPUT_SHAPES["prefill_32k"])
+    de = roofline.model_flops(cfg, shapes, axes, INPUT_SHAPES["decode_32k"])
+    assert tr > pf > de > 0
