@@ -52,18 +52,61 @@ def main(quick: bool = False) -> None:
         )
         rep.add(f"flash_S{S}_H{Hq}kv{Hkv}_w{win}_cap{cap}", us_per_call=t * 1e6, max_err=err)
 
-    # boost update
-    n = 65536
-    H = 16
-    preds = jax.random.randint(ks[6], (H, n), 0, 8)
-    y = jax.random.randint(ks[7], (n,), 0, 8)
-    w = jax.random.uniform(ks[0], (n,))
-    a = ops.weighted_errors(preds, y, w, use_pallas=True)
-    b = ref.weighted_errors_ref(preds, y, w)
-    err = float(jnp.max(jnp.abs(a - b)))
-    t = timeit(lambda: jax.block_until_ready(ref.weighted_errors_ref(preds, y, w)))
-    rep.add(f"weighted_errors_H{H}_n{n}", us_per_call=t * 1e6, max_err=err)
-    rep.finish()
+    # boost-update kernels: parity + throughput across the AdaBoost.F
+    # hot-spot shapes (H x n whole-space scoring), including ragged shapes
+    # (H not a multiple of block_h, n not a multiple of block_s).  Timings
+    # follow the ops dispatch: the Pallas kernel on TPU, the jnp oracle on
+    # CPU (interpret-mode wall time is not a perf signal) — the `path`
+    # column records which one a row measured.
+    on_tpu = jax.default_backend() == "tpu"
+    path = "pallas" if on_tpu else "ref"
+    err_sweeps = [(16, 65536), (33, 4097), (120, 32768)]
+    if quick:
+        err_sweeps = err_sweeps[:2]
+    for H, n in err_sweeps:
+        preds = jax.random.randint(ks[6], (H, n), 0, 8)
+        y = jax.random.randint(ks[7], (n,), 0, 8)
+        w = jax.random.uniform(ks[0], (n,))
+        a = ops.weighted_errors(preds, y, w, use_pallas=True)
+        b = ref.weighted_errors_ref(preds, y, w)
+        err = float(jnp.max(jnp.abs(a - b)))
+        fn = jax.jit(
+            lambda p, yy, ww: ops.weighted_errors(p, yy, ww, use_pallas=on_tpu)
+        )
+        t = timeit(lambda: jax.block_until_ready(fn(preds, y, w)))
+        rep.add(
+            f"weighted_errors_H{H}_n{n}",
+            us_per_call=t * 1e6,
+            max_err=err,
+            gcells_per_s=round(H * n / t / 1e9, 3),
+            path=path,
+        )
+
+    upd_sweeps = [(65536,), (4097,)]
+    if quick:
+        upd_sweeps = upd_sweeps[:1]
+    for (n,) in upd_sweeps:
+        w = jax.random.uniform(ks[1], (n,))
+        mis = jax.random.bernoulli(ks[2], 0.4, (n,)).astype(jnp.float32)
+        mask = (jnp.arange(n) < n - 5).astype(jnp.float32)
+        alpha = jnp.float32(1.3)
+        a = ops.weight_update(w, mis, mask, alpha, use_pallas=True)
+        b = ref.boost_weight_update_ref(w, mis, mask, alpha)
+        err = float(jnp.max(jnp.abs(a - b)))
+        fn = jax.jit(
+            lambda ww, mm, kk, aa: ops.weight_update(ww, mm, kk, aa, use_pallas=on_tpu)
+        )
+        t = timeit(lambda: jax.block_until_ready(fn(w, mis, mask, alpha)))
+        rep.add(
+            f"weight_update_n{n}",
+            us_per_call=t * 1e6,
+            max_err=err,
+            gelem_per_s=round(n / t / 1e9, 3),
+            path=path,
+        )
+    # quick runs drop sweep rows — never let them overwrite the committed
+    # perf-trajectory baseline
+    rep.finish(baseline=not quick)
 
 
 if __name__ == "__main__":

@@ -25,9 +25,12 @@ class Reporter:
         us = f"{us_per_call:.1f}" if us_per_call is not None else ""
         print(f"{self.bench}/{name},{us},{d}", flush=True)
 
-    def finish(self) -> None:
+    def finish(self, baseline: bool = False) -> None:
         RESULTS_DIR.mkdir(parents=True, exist_ok=True)
-        (RESULTS_DIR / f"{self.bench}.json").write_text(json.dumps(self.rows, indent=2))
+        payload = json.dumps(self.rows, indent=2)
+        (RESULTS_DIR / f"{self.bench}.json").write_text(payload)
+        if baseline:  # committed perf-trajectory baseline at the repo root
+            (RESULTS_DIR.parent.parent / f"BENCH_{self.bench}.json").write_text(payload)
 
 
 def timeit(fn, *args, repeats: int = 3, warmup: int = 1) -> float:

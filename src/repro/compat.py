@@ -1,0 +1,66 @@
+"""Version-compat shims for JAX APIs that moved between releases.
+
+The codebase targets the modern spelling (``jax.shard_map``,
+``jax.set_mesh``, ``jax.sharding.get_abstract_mesh``); on older
+installs (0.4.x) those names live under ``jax.experimental.shard_map``
+/ ``Mesh.__enter__`` / ``jax._src.mesh``.  Import from here instead of
+feature-testing at every call site.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+
+# -- shard_map ---------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+                  axis_names: Any = None):
+        kw = {} if axis_names is None else {"axis_names": axis_names}
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma, **kw,
+        )
+
+else:  # jax <= 0.4.x: experimental module, check_rep + auto spellings
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+                  axis_names: Any = None):
+        # ``axis_names`` (manual axes) inverts to ``auto`` (everything else).
+        auto = (
+            frozenset(mesh.axis_names) - frozenset(axis_names)
+            if axis_names is not None
+            else frozenset()
+        )
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma, auto=auto,
+        )
+
+
+# -- mesh context ------------------------------------------------------------
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+else:
+
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        with mesh:  # Mesh.__enter__ sets the legacy thread-resources env
+            yield mesh
+
+
+def get_abstract_mesh():
+    """Current-context mesh (``.empty``/``.shape``-bearing), or None."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    try:  # 0.4.x: Mesh.__enter__ populates the thread-resources env
+        from jax._src import mesh as _mesh_lib
+
+        return _mesh_lib.thread_resources.env.physical_mesh
+    except Exception:  # pragma: no cover - very old jax
+        return None

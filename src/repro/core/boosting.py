@@ -12,6 +12,11 @@ Everything here is pure and jit-able; ``fl/sharded.py`` re-expresses the
 same round as an SPMD program over the mesh's data axis, where the
 ``all_hypotheses`` stacking below becomes ``lax.all_gather`` and the
 error-matrix reduction becomes ``lax.psum``.
+
+The step-3/4 hot path (whole-space scoring + weight update) runs through
+the predict-once engine in ``core/scoring.py``: each round materialises
+the prediction tensor exactly once and every error/misprediction/weight
+quantity is a (optionally Pallas-kernel-backed) reduction over it.
 """
 from __future__ import annotations
 
@@ -21,6 +26,7 @@ from typing import Any, Callable, Dict, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import scoring
 from repro.learners.base import LearnerSpec, WeakLearner
 
 # ---------------------------------------------------------------------------
@@ -40,8 +46,7 @@ def _stack_slots(template: Any, T: int) -> Any:
     return jax.tree.map(lambda x: jnp.zeros((T,) + x.shape, x.dtype), template)
 
 
-def _take_slot(params: Any, t) -> Any:
-    return jax.tree.map(lambda x: x[t], params)
+_take_slot = scoring._take_slot  # single canonical slot-select helper
 
 
 def _set_slot(buf: Any, t, value: Any) -> Any:
@@ -70,11 +75,7 @@ def ensemble_votes(
     T = ens.alpha.shape[0]
 
     def member_pred(params_t):
-        if committee:  # majority vote of the committee members first
-            preds = jax.vmap(lambda p: learner.predict(spec, p, X))(params_t)  # [C, n]
-            tally = jnp.sum(jax.nn.one_hot(preds, spec.n_classes), axis=0)  # [n, K]
-            return jnp.argmax(tally, axis=-1).astype(jnp.int32)
-        return learner.predict(spec, params_t, X)
+        return scoring.member_prediction(learner, spec, params_t, X, committee=committee)
 
     preds = jax.vmap(lambda t: member_pred(_take_slot(ens.params, t)))(jnp.arange(T))  # [T, n]
     used = (jnp.arange(T) < ens.count).astype(jnp.float32) * ens.alpha  # [T]
@@ -127,35 +128,9 @@ def _local_fits(learner, spec, w, X, y, key):
     return jax.vmap(fit_one)(X, y, w, keys)
 
 
-def _error_matrix(learner, spec, hyp_stacked, X, y, w):
-    """eps[i, j] = weighted error of hypothesis j on collaborator i's data
-    (paper step 3: each client evaluates the whole hypothesis space)."""
-
-    def on_collab(Xi, yi, wi):
-        def of_hyp(pj):
-            mis = (learner.predict(spec, pj, Xi) != yi).astype(jnp.float32)
-            return jnp.sum(wi * mis)
-
-        return jax.vmap(of_hyp)(hyp_stacked)
-
-    return jax.vmap(on_collab)(X, y, w)  # [C, H]
-
-
 def _samme_alpha(eps: jax.Array, n_classes: int) -> jax.Array:
     eps = jnp.clip(eps, 1e-10, 1.0 - 1e-10)
     return jnp.clip(jnp.log((1.0 - eps) / eps) + jnp.log(n_classes - 1.0), -10.0, 10.0)
-
-
-def _update_weights(learner, spec, chosen, alpha, w, X, y, mask):
-    """w <- w * exp(alpha * 1[mispredict]) then global renormalisation
-    (paper step 4; the renormalisation is why norms are exchanged)."""
-
-    def mis_one(Xi, yi):
-        return (learner.predict(spec, chosen, Xi) != yi).astype(jnp.float32)
-
-    mis = jax.vmap(mis_one)(X, y)  # [C, n]
-    w = w * jnp.exp(alpha * mis) * mask
-    return w / jnp.maximum(jnp.sum(w), 1e-30)
 
 
 # ---------------------------------------------------------------------------
@@ -170,14 +145,18 @@ def adaboost_f_round(
     X: jax.Array,
     y: jax.Array,
     mask: jax.Array,
+    *,
+    use_pallas: bool = False,
 ) -> Tuple[BoostState, Dict[str, jax.Array]]:
     key, kfit = jax.random.split(state.key)
     w = state.weights
 
     # step 2: local training + hypothesis-space broadcast
     hyps = _local_fits(learner, spec, w, X, y, kfit)  # [C, ...]
-    # step 3: every client evaluates every hypothesis on its local shard
-    errs = _error_matrix(learner, spec, hyps, X, y, w)  # [C, C]
+    # step 3: predict ONCE per (hypothesis, shard) — every quantity below
+    # is a reduction over this tensor, never a second predict
+    preds = scoring.predict_tensor(learner, spec, hyps, X)  # [C, C, n]
+    errs = scoring.error_matrix(preds, y, w, use_pallas=use_pallas)  # [C, C]
     # step 4 (aggregator): globally-weighted error, best hypothesis, alpha
     eps = jnp.sum(errs, axis=0)  # weights are globally normalised: sum_i ||w_i|| == 1
     c = jnp.argmin(eps)
@@ -190,7 +169,8 @@ def adaboost_f_round(
         alpha=ens.alpha.at[ens.count].set(alpha),
         count=ens.count + 1,
     )
-    w = _update_weights(learner, spec, chosen, alpha, w, X, y, mask)
+    mis = scoring.chosen_mis(preds, y, c)  # row slice of preds
+    w = scoring.update_weights(w, mis, mask, alpha, use_pallas=use_pallas)
     metrics = {"epsilon": eps[c], "alpha": alpha, "chosen": c.astype(jnp.int32)}
     return BoostState(ens, w, key), metrics
 
@@ -206,7 +186,7 @@ def _committee_predict(learner, spec, committee, X):
     return jnp.argmax(tally, axis=-1).astype(jnp.int32)
 
 
-def distboost_f_round(learner, spec, state, X, y, mask):
+def distboost_f_round(learner, spec, state, X, y, mask, *, use_pallas: bool = False):
     key, kfit = jax.random.split(state.key)
     w = state.weights
     committee = _local_fits(learner, spec, w, X, y, kfit)  # [C, ...]
@@ -214,7 +194,7 @@ def distboost_f_round(learner, spec, state, X, y, mask):
     def mis_one(Xi, yi):
         return (_committee_predict(learner, spec, committee, Xi) != yi).astype(jnp.float32)
 
-    mis = jax.vmap(mis_one)(X, y)  # [C, n]
+    mis = jax.vmap(mis_one)(X, y)  # [C, n] — the round's ONLY predict pass
     eps = jnp.sum(w * mis)
     alpha = _samme_alpha(eps, spec.n_classes)
 
@@ -224,8 +204,7 @@ def distboost_f_round(learner, spec, state, X, y, mask):
         alpha=ens.alpha.at[ens.count].set(alpha),
         count=ens.count + 1,
     )
-    w = w * jnp.exp(alpha * mis) * mask
-    w = w / jnp.maximum(jnp.sum(w), 1e-30)
+    w = scoring.update_weights(w, mis, mask, alpha, use_pallas=use_pallas)
     metrics = {"epsilon": eps, "alpha": alpha, "chosen": jnp.zeros((), jnp.int32)}
     return BoostState(ens, w, key), metrics
 
@@ -263,11 +242,28 @@ def preweak_f_setup(learner, spec, state, X, y, mask, T: int):
     return flat, BoostState(state.ensemble, state.weights, keys[-1])
 
 
-def preweak_f_round(learner, spec, state, hyp_space, X, y, mask):
-    """Rounds loop only on steps 3-4 (red dotted line in Fig. 1)."""
+def preweak_f_predictions(learner, spec, hyp_space, X) -> jax.Array:
+    """Setup-time prediction cache [C, C*T, n] for the static hypothesis
+    space: PreWeak.F's C*T hypotheses never change across rounds, so the
+    whole-space scoring of every round can reuse this one tensor —
+    O(H*n) reduction per round instead of O(H*n*predict)."""
+    return scoring.predict_tensor(learner, spec, hyp_space, X)
+
+
+def preweak_f_round(learner, spec, state, hyp_space, X, y, mask, *,
+                    pred_cache: jax.Array | None = None, use_pallas: bool = False):
+    """Rounds loop only on steps 3-4 (red dotted line in Fig. 1).
+
+    With ``pred_cache`` (from :func:`preweak_f_predictions`) the round is
+    a pure weighted reduction over the cached predictions; without it the
+    space is re-predicted each round (the pre-optimisation behaviour).
+    """
     key = state.key
     w = state.weights
-    errs = _error_matrix(learner, spec, hyp_space, X, y, w)  # [C, C*T]
+    preds = pred_cache if pred_cache is not None else preweak_f_predictions(
+        learner, spec, hyp_space, X
+    )  # [C, C*T, n]
+    errs = scoring.error_matrix(preds, y, w, use_pallas=use_pallas)  # [C, C*T]
     eps = jnp.sum(errs, axis=0)
     c = jnp.argmin(eps)
     alpha = _samme_alpha(eps[c], spec.n_classes)
@@ -279,7 +275,8 @@ def preweak_f_round(learner, spec, state, hyp_space, X, y, mask):
         alpha=ens.alpha.at[ens.count].set(alpha),
         count=ens.count + 1,
     )
-    w = _update_weights(learner, spec, chosen, alpha, w, X, y, mask)
+    mis = scoring.chosen_mis(preds, y, c)  # row slice of preds
+    w = scoring.update_weights(w, mis, mask, alpha, use_pallas=use_pallas)
     metrics = {"epsilon": eps[c], "alpha": alpha, "chosen": c.astype(jnp.int32)}
     return BoostState(ens, w, key), metrics
 
@@ -289,7 +286,8 @@ def preweak_f_round(learner, spec, state, hyp_space, X, y, mask):
 # ---------------------------------------------------------------------------
 
 
-def bagging_round(learner, spec, state, X, y, mask):
+def bagging_round(learner, spec, state, X, y, mask, *, use_pallas: bool = False):
+    del use_pallas  # no scoring reduction in bagging; kwarg kept for ROUND_FNS uniformity
     key, kfit, kpick = jax.random.split(state.key, 3)
     w = mask / jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)  # local-uniform
     hyps = _local_fits(learner, spec, w, X, y, kfit)

@@ -50,6 +50,17 @@ class OptimizationFlags:
         (10s/1s -> 0.01s sleep calibration analogue).
     fused_round: jit the whole federated round as one program
         (removes per-task dispatch overhead; beyond-paper).
+    use_pallas: route the step-3/4 scoring reductions (error matrix,
+        fused weight update) through the Pallas TPU kernels in
+        ``kernels/boost_update.py`` instead of the pure-jnp oracles
+        (beyond-paper; off-TPU backends run the kernels in interpret
+        mode, so the default is off — flip on for TPU deployments).
+    cache_predictions: predict-once caching (beyond-paper) —
+        (a) PreWeak.F keeps a setup-time ``[C, C*T, n]`` prediction
+        cache of its static hypothesis space, turning every round into
+        a pure weighted reduction, and (b) ensemble evaluation keeps a
+        running vote tally and scores only newly appended members
+        instead of re-predicting all T slots each eval.
     """
 
     packed_serialization: bool = True
@@ -57,6 +68,8 @@ class OptimizationFlags:
     tensordb_retention: int = 2
     fast_barrier: bool = True
     fused_round: bool = True
+    use_pallas: bool = False
+    cache_predictions: bool = True
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,202 @@
+"""Predict-once scoring engine — the canonical round structure for
+MAFL's step-3 hot-spot.
+
+Every federated boosting round makes each collaborator score the WHOLE
+hypothesis space on its local shard (paper step 3): H x n work per
+collaborator, the reduction the §5.1 framework optimisations exist to
+feed.  The naive expression of a round invokes ``learner.predict``
+multiple times on the same (hypothesis, shard) pair — once for the
+error matrix, once more for the chosen hypothesis's mispredictions at
+weight-update time.  Following the paper's own profiling lesson
+(framework plumbing around the learner, not the learner, dominates
+round time), this module makes **predict once, reduce many** canonical:
+
+  * ``predict_matrix`` / ``predict_tensor`` — materialise the
+    prediction matrix ``preds [H, n]`` (or ``[C, H, n]``) exactly once;
+  * ``error_matrix``  — kernel-backed ``eps[i, h]`` reduction over the
+    materialised predictions (``kernels.ops.weighted_errors``);
+  * ``chosen_mis``    — the chosen hypothesis's misprediction vector is
+    a ROW SLICE of ``preds``, never a second predict;
+  * ``update_weights`` — fused ``w * exp(alpha*mis) * mask`` + global
+    renormalisation (``kernels.ops.weight_update``);
+  * ``VoteTally`` — incremental ensemble evaluation: a running ``[n, K]``
+    vote tally that adds only the NEWLY appended members' votes each
+    eval instead of re-predicting all T ensemble slots.
+
+Prediction caching for static hypothesis spaces (PreWeak.F's C*T space
+never changes across rounds) is just ``predict_tensor`` called once at
+setup and the resulting tensor fed back into every round — see
+``boosting.preweak_f_round(pred_cache=...)``.
+
+Everything is pure and jit-able.  ``use_pallas`` dispatches the Pallas
+TPU kernels (interpret mode off-TPU) vs the pure-jnp oracles in
+``kernels/ref.py``; both paths agree to float32 tolerance and are swept
+against each other in tests/test_scoring.py.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.learners.base import LearnerSpec, WeakLearner
+
+
+def _take_slot(params: Any, t) -> Any:
+    return jax.tree.map(lambda x: x[t], params)
+
+
+# ---------------------------------------------------------------------------
+# Predict once
+# ---------------------------------------------------------------------------
+
+
+def predict_matrix(
+    learner: WeakLearner, spec: LearnerSpec, hyps: Any, X: jax.Array
+) -> jax.Array:
+    """Predictions of every hypothesis on one shard: [H, n] i32.
+
+    The single place a round invokes ``learner.predict`` on the
+    hypothesis space — every downstream quantity (error matrix, chosen
+    mispredictions, weight update) is a reduction over this matrix.
+    """
+    return jax.vmap(lambda p: learner.predict(spec, p, X))(hyps)
+
+
+def predict_tensor(
+    learner: WeakLearner, spec: LearnerSpec, hyps: Any, X: jax.Array
+) -> jax.Array:
+    """Predictions of every hypothesis on every collaborator shard:
+    X [C, n, d] -> [C, H, n] i32.  For a static hypothesis space
+    (PreWeak.F) this is the setup-time prediction cache."""
+    return jax.vmap(lambda Xi: predict_matrix(learner, spec, hyps, Xi))(X)
+
+
+# ---------------------------------------------------------------------------
+# Reduce many
+# ---------------------------------------------------------------------------
+
+
+def shard_errors(
+    preds: jax.Array,  # [H, n] i32
+    y: jax.Array,  # [n] i32
+    w: jax.Array,  # [n] f32 (mask folded in)
+    *,
+    use_pallas: bool = False,
+    **kw: Any,
+) -> jax.Array:
+    """eps[h] = sum_n w_n * 1[preds[h, n] != y_n] on one shard. [H] f32."""
+    return ops.weighted_errors(preds, y, w, use_pallas=use_pallas, **kw)
+
+
+def error_matrix(
+    preds: jax.Array,  # [C, H, n] i32
+    y: jax.Array,  # [C, n] i32
+    w: jax.Array,  # [C, n] f32
+    *,
+    use_pallas: bool = False,
+    **kw: Any,
+) -> jax.Array:
+    """eps[i, h] = weighted error of hypothesis h on collaborator i's
+    shard (paper step 3), reduced from the materialised predictions."""
+    return jax.vmap(
+        lambda p, yi, wi: shard_errors(p, yi, wi, use_pallas=use_pallas, **kw)
+    )(preds, y, w)
+
+
+def chosen_mis(preds: jax.Array, y: jax.Array, c: jax.Array) -> jax.Array:
+    """Misprediction vector of the chosen hypothesis: a row slice of the
+    already-materialised predictions, NOT a second predict.
+
+    preds [C, H, n] (or [H, n]), y [C, n] (or [n]), c scalar -> f32 mask.
+    """
+    rows = jnp.take(preds, c, axis=-2)  # [C, n] / [n]
+    return (rows != y).astype(jnp.float32)
+
+
+def update_weights(
+    w: jax.Array,  # [C, n] (or [n]) f32
+    mis: jax.Array,  # same shape, f32
+    mask: jax.Array,  # same shape, f32
+    alpha: jax.Array,  # scalar f32
+    *,
+    use_pallas: bool = False,
+    renormalize: bool = True,
+    **kw: Any,
+) -> jax.Array:
+    """Fused AdaBoost weight update ``w * exp(alpha*mis) * mask`` then
+    global renormalisation (paper step 4 — the renormalisation is why
+    weight norms are exchanged)."""
+    flat = ops.weight_update(
+        w.reshape(-1), mis.reshape(-1), mask.reshape(-1), alpha,
+        use_pallas=use_pallas, **kw,
+    ).reshape(w.shape)
+    if not renormalize:
+        return flat
+    return flat / jnp.maximum(jnp.sum(flat), 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# Incremental ensemble evaluation
+# ---------------------------------------------------------------------------
+
+
+class VoteTally(NamedTuple):
+    """Running alpha-weighted vote tally over a fixed eval set.
+
+    ``votes[n, K]`` accumulates the one-hot votes of ensemble members
+    ``[0, counted)``; each refresh adds only the members appended since
+    the last one — O(new members) predicts per eval instead of the O(T)
+    full-ensemble re-prediction of ``boosting.ensemble_votes``.
+    """
+
+    votes: jax.Array  # [n, K] f32
+    counted: jax.Array  # scalar i32 — ensemble members already tallied
+
+
+def init_tally(n: int, n_classes: int) -> VoteTally:
+    return VoteTally(
+        votes=jnp.zeros((n, n_classes), jnp.float32),
+        counted=jnp.zeros((), jnp.int32),
+    )
+
+
+def member_prediction(
+    learner: WeakLearner, spec: LearnerSpec, params_t: Any, X: jax.Array,
+    *, committee: bool = False,
+) -> jax.Array:
+    """One ensemble member's [n] class prediction — the single definition
+    of the member vote rule, shared by full (``boosting.ensemble_votes``)
+    and incremental (:func:`tally_new_votes`) evaluation."""
+    if committee:  # DistBoost.F: majority vote of the committee first
+        preds = jax.vmap(lambda p: learner.predict(spec, p, X))(params_t)
+        sub = jnp.sum(jax.nn.one_hot(preds, spec.n_classes), axis=0)
+        return jnp.argmax(sub, axis=-1).astype(jnp.int32)
+    return learner.predict(spec, params_t, X)
+
+
+def tally_new_votes(
+    learner: WeakLearner,
+    spec: LearnerSpec,
+    ensemble,  # boosting.Ensemble (duck-typed: params/alpha/count)
+    tally: VoteTally,
+    X: jax.Array,
+    *,
+    committee: bool = False,
+) -> VoteTally:
+    """Fold members ``[tally.counted, ensemble.count)`` into the tally."""
+
+    def add(t, votes):
+        pred = member_prediction(
+            learner, spec, _take_slot(ensemble.params, t), X, committee=committee
+        )
+        return votes + ensemble.alpha[t] * jax.nn.one_hot(pred, spec.n_classes)
+
+    votes = jax.lax.fori_loop(tally.counted, ensemble.count, add, tally.votes)
+    return VoteTally(votes=votes, counted=ensemble.count)
+
+
+def tally_predict(tally: VoteTally) -> jax.Array:
+    return jnp.argmax(tally.votes, axis=-1).astype(jnp.int32)

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import boosting, protocol
+from repro.core import boosting, protocol, scoring
 from repro.core.aggregation import fedavg
 from repro.core.metrics import f1_macro
 from repro.core.plan import Plan
@@ -86,6 +86,7 @@ class Federation:
         self._fused_state: Optional[boosting.BoostState] = None
         self._fused_round_fn = None
         self._wire_fmt = None
+        self._score_fn = None  # jitted predict-once shard scorer (lazy)
 
     # -- communication accounting -----------------------------------------
     def send(self, tree: Any) -> List[bytes]:
@@ -115,6 +116,8 @@ class Federation:
         Xs = jnp.stack([c.X for c in self.collaborators])
         ys = jnp.stack([c.y for c in self.collaborators])
         masks = jnp.stack([c.mask for c in self.collaborators])
+        opt = self.plan.optimizations
+        up = opt.use_pallas
         committee = self.n_collaborators if self.plan.algorithm == "distboost_f" else None
         state = boosting.init_boost_state(
             self.learner, self.spec, rounds, masks, self.key, committee_size=committee
@@ -126,24 +129,52 @@ class Federation:
                 )
             )
             hyp_space, state = setup(state, Xs, ys, masks)
+            # The C*T hypothesis space is static across rounds: predict it
+            # once at setup and every round becomes a pure reduction.
+            cache = None
+            if opt.cache_predictions:
+                cache = jax.jit(
+                    lambda hs, X: boosting.preweak_f_predictions(
+                        self.learner, self.spec, hs, X
+                    )
+                )(hyp_space, Xs)
             round_fn = jax.jit(
                 lambda s, X, y, m: boosting.preweak_f_round(
-                    self.learner, self.spec, s, hyp_space, X, y, m
+                    self.learner, self.spec, s, hyp_space, X, y, m,
+                    pred_cache=cache, use_pallas=up,
                 )
             )
         else:
             base = boosting.ROUND_FNS[self.plan.algorithm]
-            round_fn = jax.jit(lambda s, X, y, m: base(self.learner, self.spec, s, X, y, m))
-        committee_pred = self.plan.algorithm == "distboost_f"
-        predict = jax.jit(
-            lambda ens, X: boosting.strong_predict(
-                self.learner, self.spec, ens, X, committee=committee_pred
+            round_fn = jax.jit(
+                lambda s, X, y, m: base(self.learner, self.spec, s, X, y, m, use_pallas=up)
             )
-        )
+        committee_pred = self.plan.algorithm == "distboost_f"
+        if opt.cache_predictions:
+            # incremental eval: running vote tally; each eval adds only the
+            # members appended since the previous one
+            tally = scoring.init_tally(self.X_test.shape[0], self.spec.n_classes)
+            tally_fn = jax.jit(
+                lambda ens, tl: scoring.tally_new_votes(
+                    self.learner, self.spec, ens, tl, self.X_test,
+                    committee=committee_pred,
+                )
+            )
+        else:
+            predict = jax.jit(
+                lambda ens, X: boosting.strong_predict(
+                    self.learner, self.spec, ens, X, committee=committee_pred
+                )
+            )
         for r in range(rounds):
             state, metrics = round_fn(state, Xs, ys, masks)
             if (r + 1) % eval_every == 0 or r == rounds - 1:
-                f1 = f1_macro(self.y_test, predict(state.ensemble, self.X_test), self.spec.n_classes)
+                if opt.cache_predictions:
+                    tally = tally_fn(state.ensemble, tally)
+                    pred = scoring.tally_predict(tally)
+                else:
+                    pred = predict(state.ensemble, self.X_test)
+                f1 = f1_macro(self.y_test, pred, self.spec.n_classes)
                 self.history.append(
                     {"round": r, "f1": float(f1), **{k: float(v) for k, v in metrics.items()}}
                 )
@@ -193,15 +224,29 @@ def _weak_learners_validate(fed: Federation, r: int, args: Dict[str, Any]) -> No
     fed.comm_bytes += sum(sum(len(b) for b in bufs) for _, bufs in entries) * (
         fed.n_collaborators - 1
     )  # n-1 extra copies on the wire
+    # predict-once batched scoring: stack the hypothesis space and score
+    # each collaborator's shard with ONE jitted call (a kernel-backed
+    # reduction over the materialised [H, n] predictions) instead of the
+    # C x H Python double loop with a per-element float() device sync.
+    hyp_stack = jax.tree.map(lambda *ls: jnp.stack(ls), *hyps)
+    if fed._score_fn is None:
+        up = fed.plan.optimizations.use_pallas
+
+        def _score(hs, X, y, w):
+            preds = scoring.predict_matrix(fed.learner, fed.spec, hs, X)
+            return preds, scoring.shard_errors(preds, y, w, use_pallas=up)
+
+        fed._score_fn = jax.jit(_score)
     errs = np.zeros((fed.n_collaborators, len(hyps)))
     norms = np.zeros(fed.n_collaborators)
+    pred_rows = []
     for i, c in enumerate(fed.collaborators):
-        for j, h in enumerate(hyps):
-            mis = (fed.learner.predict(fed.spec, h, c.X) != c.y).astype(jnp.float32)
-            errs[i, j] = float(jnp.sum(c.weights * mis * c.mask))
+        preds_i, errs_i = fed._score_fn(hyp_stack, c.X, c.y, c.weights * c.mask)
+        pred_rows.append(preds_i)  # reused by adaboost_update — no re-predict
+        errs[i] = np.asarray(errs_i)  # one device sync per collaborator
         norms[i] = float(jnp.sum(c.weights * c.mask))
         c.db.put(TensorKey("misprediction", c.origin, r), None)
-    fed._round_scratch = {"errs": errs, "norms": norms, "hyps": hyps}
+    fed._round_scratch = {"errs": errs, "norms": norms, "hyps": hyps, "preds": pred_rows}
     fed.aggregator.db.put(TensorKey("error_matrix", "aggregator", r), errs)
 
 
@@ -219,10 +264,17 @@ def _adaboost_update(fed: Federation, r: int, args: Dict[str, Any]) -> None:
     fed.aggregator.db.put(TensorKey("adaboost_coeff", "aggregator", r), alpha)
     # broadcast (chosen hypothesis, alpha); collaborators update weights
     fed.comm_bytes += (wire_size(chosen) + 8) * fed.n_collaborators
+    up = fed.plan.optimizations.use_pallas
+    pred_rows = fed._round_scratch.get("preds")
     total = 0.0
-    for c in fed.collaborators:
-        mis = (fed.learner.predict(fed.spec, chosen, c.X) != c.y).astype(jnp.float32)
-        c.weights = c.weights * jnp.exp(alpha * mis) * c.mask
+    for i, c in enumerate(fed.collaborators):
+        # chosen-hypothesis mispredictions: a row slice of the predictions
+        # already materialised by weak_learners_validate — no re-predict
+        mis = (pred_rows[i][c_idx] != c.y).astype(jnp.float32)
+        c.weights = scoring.update_weights(
+            c.weights, mis, c.mask, jnp.float32(alpha),
+            use_pallas=up, renormalize=False,  # global renorm via norm exchange below
+        )
         total += float(jnp.sum(c.weights))
     for c in fed.collaborators:  # global renormalisation via norm exchange
         c.weights = c.weights / max(total, 1e-30)

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
+from repro.core import scoring
 from repro.core.boosting import BoostState, Ensemble, _samme_alpha, _set_slot, _take_slot
 from repro.learners.base import LearnerSpec, WeakLearner
 
@@ -75,8 +77,16 @@ def sharded_adaboost_round(
     mask: jax.Array,  # [C, n]
     *,
     packed_broadcast: bool = False,
+    use_pallas: bool = False,
 ):
-    """One AdaBoost.F round, collaborator-parallel over the mesh."""
+    """One AdaBoost.F round, collaborator-parallel over the mesh.
+
+    Step 3 is predict-once per shard: the [C, n] prediction matrix is
+    materialised a single time, the local error vector is a kernel-backed
+    ``weighted_errors`` reduction over it (then ``psum`` across the
+    federation axes), and the chosen hypothesis's mispredictions are a
+    row slice of the same matrix — never a second predict.
+    """
     axes = fl_axes(mesh)
 
     def body(ens_params, ens_alpha, ens_count, w, key, Xl, yl, ml):
@@ -98,12 +108,10 @@ def sharded_adaboost_round(
             hyps = jax.tree.map(lambda l: _multi_gather(l, axes), h_local)
         # hyps: [C, ...] — every collaborator now holds the full space
 
-        # paper step 3: score the whole space on the local shard
-        def err_of(hj):
-            mis = (learner.predict(spec, hj, Xi) != yi).astype(jnp.float32)
-            return jnp.sum(wi * mis * mi)
-
-        local_errs = jax.vmap(err_of)(hyps)  # [C]
+        # paper step 3: score the whole space on the local shard — predict
+        # ONCE, then reduce with the kernel-backed weighted-error sum
+        preds = scoring.predict_matrix(learner, spec, hyps, Xi)  # [C, n]
+        local_errs = scoring.shard_errors(preds, yi, wi * mi, use_pallas=use_pallas)
         eps = _multi_psum(local_errs, axes)  # weights globally normalised
 
         # paper step 4 (aggregator, replicated): select + alpha + append
@@ -114,16 +122,20 @@ def sharded_adaboost_round(
         ens_alpha = ens_alpha.at[ens_count].set(alpha)
         ens_count = ens_count + 1
 
-        # weight update + global renormalisation (the 'norm exchange')
-        mis = (learner.predict(spec, chosen, Xi) != yi).astype(jnp.float32)
-        wi = wi * jnp.exp(alpha * mis) * mi
+        # weight update + global renormalisation (the 'norm exchange');
+        # the chosen hypothesis's mispredictions are a row slice of preds
+        mis = scoring.chosen_mis(preds, yi, c)
+        wi = scoring.update_weights(
+            wi, mis, mi, alpha, use_pallas=use_pallas,
+            renormalize=False,  # renorm needs the cross-shard psum'd total below
+        )
         total = _multi_psum(jnp.sum(wi), axes)
         wi = wi / jnp.maximum(total, 1e-30)
         metrics = {"epsilon": eps[c], "alpha": alpha, "chosen": c.astype(jnp.int32)}
         return ens_params, ens_alpha, ens_count, wi[None], metrics
 
     coll = P(axes) if axes else P()
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(P(), P(), P(), coll, P(), coll, coll, coll),
@@ -169,7 +181,7 @@ def sharded_strong_predict(
         return jnp.argmax(votes, axis=-1).astype(jnp.int32)
 
     coll = P(axes) if axes else P()
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body, mesh=mesh, in_specs=(P(), P(), P(), coll), out_specs=coll, check_vma=False
     )
     return fn(ens.params, ens.alpha, ens.count, X)

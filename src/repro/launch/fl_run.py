@@ -16,6 +16,7 @@ import time
 
 import jax
 
+from repro import compat
 from repro.core.metrics import f1_macro
 from repro.core.plan import OptimizationFlags, adaboost_plan, bagging_plan, fedavg_plan
 from repro.data import get_dataset
@@ -37,6 +38,9 @@ def main(argv=None):
     ap.add_argument("--depth", type=int, default=4)
     ap.add_argument("--eval-every", type=int, default=5)
     ap.add_argument("--faithful", action="store_true")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="route step-3/4 scoring through the Pallas kernels "
+                         "(TPU; interpret mode elsewhere)")
     ap.add_argument("--sharded", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -63,11 +67,21 @@ def main(argv=None):
         plan = bagging_plan(rounds=args.rounds)
     else:
         plan = adaboost_plan(rounds=args.rounds, algorithm=args.algorithm)
-    if args.faithful:
-        import dataclasses
+    import dataclasses
 
+    if args.faithful:
         plan = dataclasses.replace(
-            plan, optimizations=OptimizationFlags(False, False, 2, False, False)
+            plan,
+            optimizations=OptimizationFlags(
+                packed_serialization=False, bounded_tensordb=False,
+                fast_barrier=False, fused_round=False,
+                use_pallas=args.use_pallas, cache_predictions=False,
+            ),
+        )
+    elif args.use_pallas:
+        plan = dataclasses.replace(
+            plan,
+            optimizations=dataclasses.replace(plan.optimizations, use_pallas=True),
         )
     fed = Federation(plan, Xs, ys, masks, Xte, yte, lspec, k3)
     t0 = time.time()
@@ -95,9 +109,11 @@ def _run_sharded(args, lspec, Xs, ys, masks, Xte, yte, key):
     mesh = jax.make_mesh((C, n_dev // C), ("data", "model"))
     learner = get_learner(lspec.name)
     state = boosting.init_boost_state(learner, lspec, args.rounds, masks, key)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         rfn = jax.jit(
-            lambda s, X, y, m: sharded_adaboost_round(learner, lspec, mesh, s, X, y, m)
+            lambda s, X, y, m: sharded_adaboost_round(
+                learner, lspec, mesh, s, X, y, m, use_pallas=args.use_pallas
+            )
         )
         t0 = time.time()
         for r in range(args.rounds):

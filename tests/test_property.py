@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the dev extra")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.metrics import f1_macro
 from repro.core.serialization import deserialize, serialize, wire_format, wire_size

@@ -16,6 +16,7 @@ SCRIPT = textwrap.dedent(
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
+    from repro import compat
     from repro.core import boosting
     from repro.core.metrics import f1_macro
     from repro.fl.sharded import sharded_adaboost_round, sharded_strong_predict
@@ -30,7 +31,7 @@ SCRIPT = textwrap.dedent(
     lspec = LearnerSpec("decision_tree", spec_d.n_features, spec_d.n_classes, {"depth": 4})
     learner = get_learner("decision_tree")
     T = 6
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state = boosting.init_boost_state(learner, lspec, T, masks, jax.random.PRNGKey(2))
         rfn = jax.jit(lambda s, X, y, m: sharded_adaboost_round(learner, lspec, mesh, s, X, y, m))
         for _ in range(T):
