@@ -28,7 +28,13 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
 import time
+from pathlib import Path
 
 import jax
 
@@ -163,7 +169,83 @@ def main(quick: bool = False) -> None:
             seconds=round(t, 3),
             speedup_vs_uncached=round(pw_base / t, 2),
         )
+
+    # -- SPMD: packed hypothesis broadcast ablation -------------------------
+    # One all-gather per round (the whole pytree packed into a single f32
+    # wire buffer) vs one all-gather per leaf.  The device count must be
+    # forced before jax initialises, so this stage runs in a subprocess
+    # on 8 fake CPU devices — the ablation STRUCTURE; the collective win
+    # itself is a multi-host-mesh quantity (see ROADMAP).
+    for row in _packed_broadcast_ablation(rounds=3 if quick else 6):
+        rep.add(row.pop("name"), **row)
     rep.finish()
+
+
+_PACKED_SCRIPT = textwrap.dedent(
+    """
+    import os, sys, time, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    from repro import compat
+    from repro.core import boosting
+    from repro.data import get_dataset
+    from repro.fl.partition import iid_partition
+    from repro.fl.sharded import sharded_adaboost_round
+    from repro.learners import LearnerSpec, get_learner
+
+    rounds = int(sys.argv[1])
+    key = jax.random.PRNGKey(0)
+    dspec, (Xtr, ytr, _, _) = get_dataset("vehicle", key)
+    Xs, ys, masks = iid_partition(Xtr, ytr, 8, jax.random.PRNGKey(1))
+    lspec = LearnerSpec("decision_tree", dspec.n_features, dspec.n_classes,
+                        {"depth": 4, "n_bins": 16})
+    learner = get_learner(lspec.name)
+    mesh = jax.make_mesh((8,), ("data",))
+    rows = []
+    with compat.set_mesh(mesh):
+        for name, packed in [("sharded_per_leaf_broadcast", False),
+                             ("+packed_broadcast", True)]:
+            rfn = jax.jit(lambda s, X, y, m: sharded_adaboost_round(
+                learner, lspec, mesh, s, X, y, m, packed_broadcast=packed))
+            state = boosting.init_boost_state(
+                learner, lspec, rounds, masks, jax.random.PRNGKey(2))
+            s, _ = rfn(state, Xs, ys, masks)
+            jax.block_until_ready(s.weights)  # compile outside the timing
+            t0 = time.perf_counter()
+            s = state
+            for _ in range(rounds):
+                s, _ = rfn(s, Xs, ys, masks)
+            jax.block_until_ready(s.weights)
+            rows.append({"name": name,
+                         "us_per_call": (time.perf_counter() - t0) / rounds * 1e6})
+    base = rows[0]["us_per_call"]
+    for r in rows:
+        r["speedup_vs_per_leaf"] = round(base / r["us_per_call"], 2)
+        r["us_per_call"] = round(r["us_per_call"], 1)
+    print("PACKED_JSON " + json.dumps(rows))
+    """
+)
+
+
+def _packed_broadcast_ablation(rounds: int):
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join(
+        p for p in [src, os.environ.get("PYTHONPATH", "")] if p
+    ))
+    env.pop("XLA_FLAGS", None)
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-c", _PACKED_SCRIPT, str(rounds)],
+            env=env, capture_output=True, text=True, timeout=1200,
+        )
+    except (subprocess.TimeoutExpired, OSError) as e:
+        print(f"# packed_broadcast ablation failed: {e}")
+        return []
+    for line in proc.stdout.splitlines():
+        if line.startswith("PACKED_JSON "):
+            return json.loads(line[len("PACKED_JSON "):])
+    print(f"# packed_broadcast ablation failed:\n{proc.stderr[-2000:]}")
+    return []
 
 
 if __name__ == "__main__":

@@ -1,0 +1,161 @@
+"""Serving benchmark — the inference-side companion of the Fig.-3
+training ablation.
+
+For each learner family served behind the one engine API it reports:
+
+  * engine req/s + p50/p99 request latency through the micro-batching
+    scheduler (static [B, d] batches, ragged tail padded);
+  * artifact size and save+load round-trip time;
+  * the vote-cache ablation: cold (every request re-predicts all T
+    members) vs cache-hit (repeat shard answered from the resident
+    tally) vs incremental (ensemble grew by ΔT members between requests
+    — the refresh folds only the new members).
+
+The serve path is asserted bit-for-bit equal to
+``boosting.strong_predict`` before anything is timed — a benchmark of a
+wrong answer is worthless.  Writes ``BENCH_serve.json`` at the repo root
+(committed perf-trajectory baseline).
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks.common import Reporter
+from repro.core import boosting
+from repro.core.metrics import f1_macro
+from repro.data import get_dataset
+from repro.fl.partition import iid_partition
+from repro.learners import LearnerSpec, get_learner
+from repro.serve import ServeEngine, ShardVoteCache, load_artifact, save_artifact
+
+LEARNERS = {
+    "decision_tree": {"depth": 4, "n_bins": 16},
+    "ridge": {"l2": 1.0},
+    "gaussian_nb": {},
+}
+
+
+def _setup(name, hp, capacity, dspec, Xtr, ytr, key):
+    """Init a federation with `capacity` ensemble slots; runs no rounds."""
+    lspec = LearnerSpec(name, dspec.n_features, dspec.n_classes, hp)
+    learner = get_learner(name)
+    Xs, ys, masks = iid_partition(Xtr, ytr, 4, key)
+    state = boosting.init_boost_state(
+        learner, lspec, capacity, masks, jax.random.fold_in(key, 1), X=Xs
+    )
+    rfn = jax.jit(lambda s: boosting.adaboost_f_round(learner, lspec, s, Xs, ys, masks))
+    return learner, lspec, state, rfn
+
+
+def main(quick: bool = False) -> None:
+    rep = Reporter("serve")
+    rounds = 4 if quick else 10
+    grow = 2 if quick else 5  # extra members appended for the incremental stage
+    batch = 256
+    repeats = 2 if quick else 5
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    dspec, (Xtr, ytr, Xte, yte) = get_dataset("pendigits", k1)
+    Xte_np = np.asarray(Xte)
+
+    for name, hp in LEARNERS.items():
+        # capacity rounds+grow: the incremental stage appends `grow` later
+        learner, lspec, state, rfn = _setup(
+            name, hp, rounds + grow, dspec, Xtr, ytr, k2
+        )
+        for _ in range(rounds):
+            state, _ = rfn(state)
+        jax.block_until_ready(state.weights)
+        ensemble = state.ensemble
+
+        # -- artifact round-trip ------------------------------------------
+        path = Path(tempfile.mkdtemp()) / f"{name}.mafl"
+        t0 = time.perf_counter()
+        save_artifact(path, lspec, ensemble, extra={"dataset": "pendigits"})
+        art = load_artifact(path)
+        rt = time.perf_counter() - t0
+        rep.add(
+            f"{name}/artifact",
+            us_per_call=rt * 1e6,
+            artifact_bytes=path.stat().st_size,
+            members=int(art.ensemble.count),
+        )
+
+        # -- correctness gate: serve == strong_predict, bit for bit -------
+        engine = ServeEngine(art.learner, art.spec, art.ensemble, batch_size=batch)
+        engine.warmup()
+        want = np.asarray(
+            boosting.strong_predict(art.learner, art.spec, art.ensemble, Xte)
+        )
+        got = engine.predict(Xte_np)
+        np.testing.assert_array_equal(got, want)
+        f1 = float(f1_macro(yte, got, lspec.n_classes))
+
+        # -- engine throughput + latency through the scheduler ------------
+        lat, best = [], None
+        for _ in range(repeats):
+            eng = ServeEngine(art.learner, art.spec, art.ensemble, batch_size=batch)
+            eng._fns = engine._fns  # warm compile cache (same (learner, B))
+            t0 = time.perf_counter()
+            for i in range(0, Xte_np.shape[0], 37):  # ragged request stream
+                eng.submit(Xte_np[i : i + 37])
+            eng.flush()
+            dt = time.perf_counter() - t0
+            lat = eng.stats.request_latencies
+            best = min(best, dt) if best else dt
+        n = Xte_np.shape[0]
+        rep.add(
+            f"{name}/engine",
+            us_per_call=best / n * 1e6,
+            req_per_s=round(n / best),
+            p50_ms=round(float(np.percentile(lat, 50)) * 1e3, 3),
+            p99_ms=round(float(np.percentile(lat, 99)) * 1e3, 3),
+            batch=batch,
+            f1=round(f1, 4),
+        )
+
+        # -- vote cache: cold vs hit vs incremental ------------------------
+        cold = best / n  # engine pass = every request predicts all T members
+        cache = ShardVoteCache(art.learner, art.spec, art.ensemble)
+        cache.predict("test", Xte)  # residency (miss)
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            hit_pred = cache.predict("test")
+        hit = (time.perf_counter() - t0) / repeats / n
+        np.testing.assert_array_equal(hit_pred, want)
+
+        # ensemble keeps training: append `grow` members, refresh folds
+        # only those — O(new members), not O(T)
+        for _ in range(grow):
+            state, _ = rfn(state)
+        cache.update_ensemble(state.ensemble)
+        t0 = time.perf_counter()
+        inc_pred = cache.predict("test")
+        inc = (time.perf_counter() - t0) / n
+        want2 = np.asarray(
+            boosting.strong_predict(learner, lspec, state.ensemble, Xte)
+        )
+        np.testing.assert_array_equal(inc_pred, want2)
+        rep.add(
+            f"{name}/vote_cache",
+            us_per_call=hit * 1e6,
+            cold_us_per_req=round(cold * 1e6, 2),
+            hit_us_per_req=round(hit * 1e6, 2),
+            hit_speedup_vs_cold=round(cold / hit, 1),
+            incremental_us_per_req=round(inc * 1e6, 2),
+            members_at_cold=rounds,
+            members_folded_incremental=grow,
+        )
+    rep.finish(baseline=not quick)  # quick runs must not rewrite the baseline
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(**vars(ap.parse_args()))

@@ -20,10 +20,12 @@ from benchmarks import (
     bench_learning_curves,
     bench_optimizations,
     bench_scaling,
+    bench_serve,
 )
 
 BENCHES = {
     "kernels": bench_kernels.main,  # fastest first
+    "serve": bench_serve.main,
     "optimizations_fig3": bench_optimizations.main,
     "flexibility_fig4b": bench_flexibility.main,
     "learning_curves_fig4a": bench_learning_curves.main,

@@ -96,6 +96,10 @@ class BoostState(NamedTuple):
     ensemble: Ensemble
     weights: jax.Array  # [C, n] — globally normalised sample weights
     key: jax.Array
+    # Per-collaborator X-only fit precomputation (e.g. the tree learners'
+    # quantile bin edges): X is static per collaborator across rounds, so
+    # this is computed once at init and threaded through every round.
+    fit_cache: Any = None
 
 
 def init_boost_state(
@@ -106,21 +110,32 @@ def init_boost_state(
     key: jax.Array,
     *,
     committee_size: int | None = None,
+    X: jax.Array | None = None,  # [C, n, d] — enables the fit cache
 ) -> BoostState:
     k1, k2 = jax.random.split(key)
     w = mask / jnp.maximum(jnp.sum(mask), 1.0)  # uniform over the GLOBAL dataset
+    cache = None
+    if X is not None and learner.precompute is not None and learner.fit_cached is not None:
+        cache = jax.vmap(lambda Xi: learner.precompute(spec, Xi))(X)  # [C, ...]
     return BoostState(
         ensemble=init_ensemble(learner, spec, T, k1, committee_size=committee_size),
         weights=w.astype(jnp.float32),
         key=k2,
+        fit_cache=cache,
     )
 
 
-def _local_fits(learner, spec, w, X, y, key):
+def _local_fits(learner, spec, w, X, y, key, fit_cache=None):
     """Train one weak hypothesis per collaborator (paper step 2). [C, ...]"""
     C = X.shape[0]
     keys = jax.random.split(key, C)
     dummy = learner.init(spec, key)
+
+    if fit_cache is not None and learner.fit_cached is not None:
+        def fit_one_cached(Xi, yi, wi, ki, ci):
+            return learner.fit_cached(spec, dummy, Xi, yi, wi, ki, ci)
+
+        return jax.vmap(fit_one_cached)(X, y, w, keys, fit_cache)
 
     def fit_one(Xi, yi, wi, ki):
         return learner.fit(spec, dummy, Xi, yi, wi, ki)
@@ -151,8 +166,9 @@ def adaboost_f_round(
     key, kfit = jax.random.split(state.key)
     w = state.weights
 
-    # step 2: local training + hypothesis-space broadcast
-    hyps = _local_fits(learner, spec, w, X, y, kfit)  # [C, ...]
+    # step 2: local training + hypothesis-space broadcast (quantile bin
+    # edges etc. come from the round-static fit cache when available)
+    hyps = _local_fits(learner, spec, w, X, y, kfit, state.fit_cache)  # [C, ...]
     # step 3: predict ONCE per (hypothesis, shard) — every quantity below
     # is a reduction over this tensor, never a second predict
     preds = scoring.predict_tensor(learner, spec, hyps, X)  # [C, C, n]
@@ -172,7 +188,7 @@ def adaboost_f_round(
     mis = scoring.chosen_mis(preds, y, c)  # row slice of preds
     w = scoring.update_weights(w, mis, mask, alpha, use_pallas=use_pallas)
     metrics = {"epsilon": eps[c], "alpha": alpha, "chosen": c.astype(jnp.int32)}
-    return BoostState(ens, w, key), metrics
+    return BoostState(ens, w, key, state.fit_cache), metrics
 
 
 # ---------------------------------------------------------------------------
@@ -189,7 +205,7 @@ def _committee_predict(learner, spec, committee, X):
 def distboost_f_round(learner, spec, state, X, y, mask, *, use_pallas: bool = False):
     key, kfit = jax.random.split(state.key)
     w = state.weights
-    committee = _local_fits(learner, spec, w, X, y, kfit)  # [C, ...]
+    committee = _local_fits(learner, spec, w, X, y, kfit, state.fit_cache)  # [C, ...]
 
     def mis_one(Xi, yi):
         return (_committee_predict(learner, spec, committee, Xi) != yi).astype(jnp.float32)
@@ -206,7 +222,7 @@ def distboost_f_round(learner, spec, state, X, y, mask, *, use_pallas: bool = Fa
     )
     w = scoring.update_weights(w, mis, mask, alpha, use_pallas=use_pallas)
     metrics = {"epsilon": eps, "alpha": alpha, "chosen": jnp.zeros((), jnp.int32)}
-    return BoostState(ens, w, key), metrics
+    return BoostState(ens, w, key, state.fit_cache), metrics
 
 
 # ---------------------------------------------------------------------------
@@ -220,13 +236,25 @@ def preweak_f_setup(learner, spec, state, X, y, mask, T: int):
     C, n = y.shape
     keys = jax.random.split(state.key, C + 1)
 
-    def local_adaboost(Xi, yi, mi, ki):
+    cached = learner.precompute is not None and learner.fit_cached is not None
+
+    def local_adaboost(Xi, yi, mi, ki, cache_i):
         wi = mi / jnp.maximum(jnp.sum(mi), 1.0)
         dummy = learner.init(spec, ki)
+        # X is static across the T local rounds: the fit cache (quantile
+        # bin edges for trees) comes from the round state when the caller
+        # built one, else is computed once here instead of once per round.
+        cache = cache_i
+        if cache is None and cached:
+            cache = learner.precompute(spec, Xi)
 
         def round_(carry, kt):
             w, _ = carry, None
-            p = learner.fit(spec, dummy, Xi, yi, w, kt)
+            p = (
+                learner.fit_cached(spec, dummy, Xi, yi, w, kt, cache)
+                if cached
+                else learner.fit(spec, dummy, Xi, yi, w, kt)
+            )
             mis = (learner.predict(spec, p, Xi) != yi).astype(jnp.float32)
             e = jnp.sum(w * mis) / jnp.maximum(jnp.sum(w), 1e-30)
             a = _samme_alpha(e, spec.n_classes)
@@ -237,9 +265,14 @@ def preweak_f_setup(learner, spec, state, X, y, mask, T: int):
         _, ps = jax.lax.scan(round_, wi, jax.random.split(ki, T))
         return ps  # [T, ...]
 
-    hyps = jax.vmap(local_adaboost)(X, y, mask, keys[:C])  # [C, T, ...]
+    if state.fit_cache is not None and cached:
+        hyps = jax.vmap(local_adaboost)(X, y, mask, keys[:C], state.fit_cache)
+    else:
+        hyps = jax.vmap(
+            lambda Xi, yi, mi, ki: local_adaboost(Xi, yi, mi, ki, None)
+        )(X, y, mask, keys[:C])  # [C, T, ...]
     flat = jax.tree.map(lambda x: x.reshape((C * T,) + x.shape[2:]), hyps)
-    return flat, BoostState(state.ensemble, state.weights, keys[-1])
+    return flat, BoostState(state.ensemble, state.weights, keys[-1], state.fit_cache)
 
 
 def preweak_f_predictions(learner, spec, hyp_space, X) -> jax.Array:
@@ -278,7 +311,7 @@ def preweak_f_round(learner, spec, state, hyp_space, X, y, mask, *,
     mis = scoring.chosen_mis(preds, y, c)  # row slice of preds
     w = scoring.update_weights(w, mis, mask, alpha, use_pallas=use_pallas)
     metrics = {"epsilon": eps[c], "alpha": alpha, "chosen": c.astype(jnp.int32)}
-    return BoostState(ens, w, key), metrics
+    return BoostState(ens, w, key, state.fit_cache), metrics
 
 
 # ---------------------------------------------------------------------------
@@ -290,7 +323,7 @@ def bagging_round(learner, spec, state, X, y, mask, *, use_pallas: bool = False)
     del use_pallas  # no scoring reduction in bagging; kwarg kept for ROUND_FNS uniformity
     key, kfit, kpick = jax.random.split(state.key, 3)
     w = mask / jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)  # local-uniform
-    hyps = _local_fits(learner, spec, w, X, y, kfit)
+    hyps = _local_fits(learner, spec, w, X, y, kfit, state.fit_cache)
     c = jax.random.randint(kpick, (), 0, X.shape[0])  # rotate members round-robin-ish
     ens = state.ensemble
     ens = Ensemble(
@@ -299,7 +332,7 @@ def bagging_round(learner, spec, state, X, y, mask, *, use_pallas: bool = False)
         count=ens.count + 1,
     )
     metrics = {"epsilon": jnp.zeros(()), "alpha": jnp.ones(()), "chosen": c.astype(jnp.int32)}
-    return BoostState(ens, state.weights, key), metrics
+    return BoostState(ens, state.weights, key, state.fit_cache), metrics
 
 
 # ---------------------------------------------------------------------------
@@ -316,8 +349,8 @@ def centralized_adaboost(
     key: jax.Array,
 ) -> Ensemble:
     mask = jnp.ones(y.shape, jnp.float32)
-    state = init_boost_state(learner, spec, T, mask[None, :], key)
     Xc, yc, mc = X[None], y[None], mask[None]
+    state = init_boost_state(learner, spec, T, mc, key, X=Xc)
 
     def round_(state, _):
         state, m = adaboost_f_round(learner, spec, state, Xc, yc, mc)

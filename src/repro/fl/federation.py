@@ -120,7 +120,8 @@ class Federation:
         up = opt.use_pallas
         committee = self.n_collaborators if self.plan.algorithm == "distboost_f" else None
         state = boosting.init_boost_state(
-            self.learner, self.spec, rounds, masks, self.key, committee_size=committee
+            self.learner, self.spec, rounds, masks, self.key,
+            committee_size=committee, X=Xs,  # X-static fit cache (e.g. tree bin edges)
         )
         if self.plan.algorithm == "preweak_f":
             setup = jax.jit(

@@ -76,10 +76,16 @@ def sharded_adaboost_round(
     y: jax.Array,  # [C, n]
     mask: jax.Array,  # [C, n]
     *,
-    packed_broadcast: bool = False,
+    packed_broadcast: bool = True,
     use_pallas: bool = False,
 ):
     """One AdaBoost.F round, collaborator-parallel over the mesh.
+
+    ``packed_broadcast`` (default ON — the §5.1 buffer-packing analogue)
+    flattens the weak-hypothesis pytree into one f32 wire buffer so the
+    broadcast is ONE all-gather per round instead of one per leaf; flip
+    off for the pre-optimisation per-leaf behaviour (the
+    ``+packed_broadcast`` ablation stage in bench_optimizations).
 
     Step 3 is predict-once per shard: the [C, n] prediction matrix is
     materialised a single time, the local error vector is a kernel-backed
@@ -147,7 +153,10 @@ def sharded_adaboost_round(
         ens.params, ens.alpha, ens.count, state.weights, state.key, X, y, mask
     )
     key = jax.random.fold_in(state.key, 1)
-    return BoostState(Ensemble(ens_params, ens_alpha, ens_count), w, key), metrics
+    return (
+        BoostState(Ensemble(ens_params, ens_alpha, ens_count), w, key, state.fit_cache),
+        metrics,
+    )
 
 
 def _multi_gather(x, axes):

@@ -15,6 +15,7 @@ from repro.kernels.boost_update import weight_update as _weight_update
 from repro.kernels.boost_update import weighted_errors as _weighted_errors
 from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.tree_hist import tree_hist as _tree_hist
+from repro.kernels.vote_argmax import vote_argmax as _vote_argmax
 
 
 def _interpret() -> bool:
@@ -40,6 +41,14 @@ def weight_update(w, mis, mask, alpha, *, use_pallas=False, **kw):
     if use_pallas:
         return _weight_update(w, mis, mask, alpha, interpret=_interpret(), **kw)
     return ref.boost_weight_update_ref(w, mis, mask, alpha)
+
+
+def vote_argmax(preds, alpha, *, n_classes, use_pallas=False, **kw):
+    if use_pallas:
+        return _vote_argmax(
+            preds, alpha, n_classes=n_classes, interpret=_interpret(), **kw
+        )
+    return ref.vote_argmax_ref(preds, alpha, n_classes)
 
 
 def attention(q, k, v, *, use_pallas=False, **kw):

@@ -38,6 +38,22 @@ def weighted_errors_ref(
     return mis @ w
 
 
+def vote_argmax_ref(
+    preds: jax.Array,  # [T, n] i32 — per-member class predictions
+    alpha: jax.Array,  # [T] f32 — member weights (unused slots = 0)
+    n_classes: int,
+) -> jax.Array:
+    """pred[n] = argmax_k sum_t alpha_t * 1[preds[t, n] == k].
+
+    Exactly the vote rule of ``boosting.ensemble_votes`` (same one-hot +
+    einsum contraction), so the serve path built on this oracle is
+    bit-for-bit identical to ``boosting.strong_predict``.
+    """
+    onehot = jax.nn.one_hot(preds, n_classes)  # [T, n, K]
+    votes = jnp.einsum("t,tnk->nk", alpha, onehot)
+    return jnp.argmax(votes, axis=-1).astype(jnp.int32)
+
+
 def boost_weight_update_ref(
     w: jax.Array,  # [n] f32
     mis: jax.Array,  # [n] f32 — 1[chosen mispredicts]

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel for the serving-path vote reduction:
+
+  ``vote_argmax`` — pred[n] = argmax_k sum_t alpha_t * 1[preds[t, n] == k]
+
+the alpha-weighted majority vote that turns the ensemble members'
+class predictions into the strong hypothesis's answer (paper Fig. 1,
+inference side).  At serve time this is the only reduction between the
+per-member predicts and the response, so it pairs with the
+``boost_update`` kernels the same way inference pairs with training.
+
+The member axis (innermost grid dim) sweeps while an [Nblk, K] vote
+accumulator stays resident; the final member block writes the argmax.
+Padded members carry alpha == 0 and therefore vote with weight zero.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vote_kernel(preds_ref, alpha_ref, votes_ref, out_ref, *, n_classes):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        votes_ref[...] = jnp.zeros_like(votes_ref)
+
+    p = preds_ref[...]  # [Tblk, Nblk] i32
+    a = alpha_ref[...].astype(jnp.float32)  # [Tblk]
+    k_ids = jax.lax.broadcasted_iota(jnp.int32, (1, 1, n_classes), 2)
+    onehot = (p[:, :, None] == k_ids).astype(jnp.float32)  # [Tblk, Nblk, K]
+    votes_ref[...] += jnp.sum(a[:, None, None] * onehot, axis=0)  # [Nblk, K]
+
+    @pl.when(ti == pl.num_programs(1) - 1)
+    def _finish():
+        out_ref[...] = jnp.argmax(votes_ref[...], axis=-1).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_classes", "block_t", "block_n", "interpret")
+)
+def vote_argmax(
+    preds: jax.Array,  # [T, n] i32 — per-member class predictions
+    alpha: jax.Array,  # [T] f32 — member weights (unused slots = 0)
+    *,
+    n_classes: int,
+    block_t: int = 32,
+    block_n: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    T, n = preds.shape
+    block_t = min(block_t, T)
+    block_n = min(block_n, n)
+    nt, nn = -(-T // block_t), -(-n // block_n)
+    tp, np_ = nt * block_t, nn * block_n
+    # Padded members: alpha = 0 (vote with zero weight). Padded samples
+    # produce garbage rows that are sliced off below.
+    preds = jnp.pad(preds, ((0, tp - T), (0, np_ - n)))
+    alpha = jnp.pad(alpha, (0, tp - T))
+    _, out = pl.pallas_call(
+        functools.partial(_vote_kernel, n_classes=n_classes),
+        grid=(nn, nt),
+        in_specs=[
+            pl.BlockSpec((block_t, block_n), lambda ni, ti: (ti, ni)),
+            pl.BlockSpec((block_t,), lambda ni, ti: (ti,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, n_classes), lambda ni, ti: (ni, 0)),
+            pl.BlockSpec((block_n,), lambda ni, ti: (ni,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, n_classes), jnp.float32),
+            jax.ShapeDtypeStruct((np_,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(preds, alpha)
+    return out[:n]

@@ -1,1 +1,2 @@
-"""Launchers: mesh/dryrun (production), train/serve/fl_run (host)."""
+"""Launchers: mesh/dryrun (production), train/serve (LLM host),
+fl_run (federation), serve_fl (ensemble serving)."""

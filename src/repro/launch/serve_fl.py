@@ -1,0 +1,143 @@
+"""Ensemble serving driver — train-then-serve or load-artifact-then-serve.
+
+  # train a federation, save the artifact, then serve the test split:
+  PYTHONPATH=src python -m repro.launch.serve_fl --dataset pendigits \
+      --learner decision_tree --rounds 10 --artifact /tmp/pendigits.mafl
+
+  # serve an existing artifact:
+  PYTHONPATH=src python -m repro.launch.serve_fl --dataset pendigits \
+      --artifact /tmp/pendigits.mafl --load
+
+Serving drives the micro-batching engine over the test split (ragged
+tail included), reports req/s and p50/p99 latency, then replays the
+same traffic against the shard-resident vote cache to show the
+cache-hit path.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import boosting
+from repro.core.metrics import f1_macro
+from repro.data import get_dataset
+from repro.fl.partition import iid_partition
+from repro.learners import LearnerSpec, get_learner
+from repro.serve import ServeEngine, ShardVoteCache, load_artifact, save_artifact
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
+
+
+def train_ensemble(args, lspec, learner, Xtr, ytr, key):
+    Xs, ys, masks = iid_partition(Xtr, ytr, args.collaborators, key)
+    state = boosting.init_boost_state(
+        learner, lspec, args.rounds, masks, jax.random.fold_in(key, 1), X=Xs
+    )
+    rfn = jax.jit(
+        lambda s: boosting.adaboost_f_round(
+            learner, lspec, s, Xs, ys, masks, use_pallas=args.use_pallas
+        )
+    )
+    t0 = time.time()
+    for _ in range(args.rounds):
+        state, _ = rfn(state)
+    jax.block_until_ready(state.weights)
+    print(f"trained {args.rounds} rounds x {args.collaborators} collaborators "
+          f"in {time.time() - t0:.1f}s")
+    return state.ensemble
+
+
+def serve(args, learner, lspec, ensemble, Xte, yte, *, committee=False):
+    engine = ServeEngine(
+        learner, lspec, ensemble,
+        batch_size=args.batch, committee=committee, use_pallas=args.use_pallas,
+    )
+    engine.warmup()  # compile cache warm before traffic arrives
+
+    t0 = time.perf_counter()
+    ids = []
+    for i in range(0, Xte.shape[0], args.request_rows):  # ragged request stream
+        ids.extend(engine.submit(np.asarray(Xte[i : i + args.request_rows])))
+    engine.flush()
+    dt = time.perf_counter() - t0
+    pred = np.array([engine.take(i) for i in ids])
+    f1 = float(f1_macro(yte, pred, lspec.n_classes))
+    lat = engine.stats.request_latencies
+    print(
+        f"engine: {len(ids)} requests in {dt:.3f}s = {len(ids)/dt:.0f} req/s  "
+        f"p50 {1e3*_percentile(lat, 50):.2f}ms p99 {1e3*_percentile(lat, 99):.2f}ms  "
+        f"({engine.stats.batches} batches, {engine.stats.padded_rows} padded rows)  "
+        f"F1 {f1:.4f}"
+    )
+
+    # repeat traffic: the shard-resident vote cache answers from the tally
+    cache = ShardVoteCache(learner, lspec, ensemble, committee=committee)
+    cache.predict("test_split", Xte)  # first contact builds the tally
+    repeats = max(args.cache_repeats, 1)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        cache_pred = cache.predict("test_split")
+    dt_hit = (time.perf_counter() - t0) / repeats
+    assert np.array_equal(cache_pred, pred), "cache path diverged from engine"
+    print(
+        f"vote cache: repeat shard of {Xte.shape[0]} rows in {dt_hit*1e3:.2f}ms "
+        f"= {Xte.shape[0]/dt_hit:.0f} req/s ({cache.stats()})"
+    )
+    return f1
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="pendigits")
+    ap.add_argument("--learner", default="decision_tree")
+    ap.add_argument("--collaborators", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--depth", type=int, default=4)
+    ap.add_argument("--artifact", default=None,
+                    help="artifact path: written after training, or read with --load")
+    ap.add_argument("--load", action="store_true",
+                    help="skip training; serve the --artifact file")
+    ap.add_argument("--batch", type=int, default=256,
+                    help="static serving batch size")
+    ap.add_argument("--request-rows", type=int, default=37,
+                    help="rows per submitted request (ragged on purpose)")
+    ap.add_argument("--cache-repeats", type=int, default=10)
+    ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    key = jax.random.PRNGKey(args.seed)
+    k1, k2 = jax.random.split(key)
+    dspec, (Xtr, ytr, Xte, yte) = get_dataset(args.dataset, k1)
+
+    committee = False
+    if args.load:
+        if not args.artifact:
+            ap.error("--load requires --artifact")
+        art = load_artifact(args.artifact)
+        learner, lspec, ensemble = art.learner, art.spec, art.ensemble
+        committee = art.committee  # DistBoost.F artifacts serve committees
+        print(f"loaded {args.artifact}: {art.manifest['learner']} x "
+              f"{art.manifest['ensemble_count']} members")
+    else:
+        hp = {"depth": args.depth, "n_bins": 16}
+        if args.learner == "mlp":
+            hp = {"hidden": 64, "steps": 200}
+        lspec = LearnerSpec(args.learner, dspec.n_features, dspec.n_classes, hp)
+        learner = get_learner(args.learner)
+        ensemble = train_ensemble(args, lspec, learner, Xtr, ytr, k2)
+        if args.artifact:
+            p = save_artifact(args.artifact, lspec, ensemble,
+                              extra={"dataset": args.dataset})
+            print(f"saved artifact {p} ({p.stat().st_size} bytes)")
+
+    return serve(args, learner, lspec, ensemble, Xte, yte, committee=committee)
+
+
+if __name__ == "__main__":
+    main()

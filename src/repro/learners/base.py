@@ -54,6 +54,13 @@ class WeakLearner:
     # Optional gradient-based warm-start fit (continues from ``params``) —
     # required by the FedAvg/DNN workflow, meaningless for closed-form fits.
     warm_fit: Callable[..., Params] | None = None
+    # Optional X-only fit precomputation, cacheable across boosting rounds
+    # (X is static per collaborator; only the weights change round to
+    # round).  ``precompute(spec, X) -> cache`` and
+    # ``fit_cached(spec, params, X, y, w, key, cache) -> params`` must
+    # satisfy  fit_cached(..., precompute(spec, X)) == fit(...).
+    precompute: Callable[[LearnerSpec, jax.Array], Any] | None = None
+    fit_cached: Callable[..., Params] | None = None
 
     def predict(self, spec: LearnerSpec, params: Params, X: jax.Array) -> jax.Array:
         return jnp.argmax(self.predict_logits(spec, params, X), axis=-1).astype(jnp.int32)

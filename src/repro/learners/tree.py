@@ -94,6 +94,7 @@ def fit_tree(
     key: jax.Array,
     *,
     random_splits: bool = False,
+    edges: jax.Array | None = None,
 ) -> TreeParams:
     depth = spec.hp("depth", 4)
     n_bins = spec.hp("n_bins", 16)
@@ -101,7 +102,12 @@ def fit_tree(
     d = spec.n_features
     del params  # trees are fit from scratch each round
 
-    edges = _quantile_edges(X, n_bins)  # [d, B]
+    if edges is None:
+        # X is static per collaborator across boosting rounds, so callers
+        # holding a shard should compute this once (``tree_edges``) and
+        # pass it back in — the quantile re-sort is the only part of the
+        # fit that does not depend on the round's weights.
+        edges = _quantile_edges(X, n_bins)  # [d, B]
     bin_idx = _digitize(X, edges)  # [n, d]
     wy = weighted_onehot(y, w, K)  # [n, K]
 
@@ -156,8 +162,22 @@ def tree_predict_logits(spec: LearnerSpec, params: TreeParams, X: jax.Array) -> 
     return params.leaf_logits[leaf]
 
 
+def tree_edges(spec: LearnerSpec, X: jax.Array) -> jax.Array:
+    """Round-cacheable fit precomputation: the quantile bin edges."""
+    return _quantile_edges(X, spec.hp("n_bins", 16))
+
+
+def _fit_tree_cached(spec, params, X, y, w, key, edges, *, random_splits=False):
+    return fit_tree(
+        spec, params, X, y, w, key, random_splits=random_splits, edges=edges
+    )
+
+
 decision_tree = register(
-    WeakLearner("decision_tree", init_tree, fit_tree, tree_predict_logits)
+    WeakLearner(
+        "decision_tree", init_tree, fit_tree, tree_predict_logits,
+        precompute=tree_edges, fit_cached=_fit_tree_cached,
+    )
 )
 
 extra_tree = register(
@@ -166,5 +186,7 @@ extra_tree = register(
         init_tree,
         functools.partial(fit_tree, random_splits=True),
         tree_predict_logits,
+        precompute=tree_edges,
+        fit_cached=functools.partial(_fit_tree_cached, random_splits=True),
     )
 )

@@ -1,0 +1,28 @@
+"""Model-agnostic ensemble serving engine.
+
+Takes a federation's trained strong hypothesis all the way to
+high-throughput batched inference, for *any* registered weak learner:
+
+  * ``artifact``  — save/load a deployable single-file artifact
+    (versioned manifest + the packed wire format of core/serialization);
+  * ``engine``    — fixed-shape micro-batching request scheduler with a
+    warm per-batch-size compile cache and a Pallas ``vote_argmax``
+    reduction over member votes;
+  * ``cache``     — shard-resident incremental vote cache built on
+    ``core/scoring.VoteTally``: repeat traffic reuses per-member votes
+    and a still-training ensemble updates serving state in
+    O(new members).
+
+Driver: ``launch/serve_fl.py``.  Benchmark: ``benchmarks/bench_serve.py``.
+"""
+from repro.serve.artifact import LoadedArtifact, load_artifact, save_artifact
+from repro.serve.cache import ShardVoteCache
+from repro.serve.engine import ServeEngine
+
+__all__ = [
+    "LoadedArtifact",
+    "ServeEngine",
+    "ShardVoteCache",
+    "load_artifact",
+    "save_artifact",
+]

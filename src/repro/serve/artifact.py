@@ -1,0 +1,142 @@
+"""Deployable ensemble artifact — the federation's inference deliverable.
+
+A trained strong hypothesis (``boosting.Ensemble``) for ANY registered
+learner becomes one file:
+
+    MAFLSRV1 | u32 manifest_len | manifest JSON | packed payload
+
+The payload is ``core/serialization.serialize(ensemble, packed=True)`` —
+every pytree leaf in one contiguous buffer, the same wire format the
+federation exchanges hypotheses in.  The manifest is the model-agnostic
+part: it names the learner (registry key), the learning problem
+(n_features/n_classes/hparams), and the ensemble geometry (capacity T,
+used count, committee size), which is exactly enough to rebuild the
+pytree *structure* via ``learner.init`` + ``init_ensemble`` and pour the
+payload back into it — no pickle, no code in the artifact.
+"""
+from __future__ import annotations
+
+import json
+import struct
+import zlib
+from pathlib import Path
+from typing import Any, NamedTuple
+
+import jax
+
+from repro.core import boosting
+from repro.core.serialization import deserialize, serialize, wire_format
+from repro.learners import LearnerSpec, WeakLearner, get_learner
+
+MAGIC = b"MAFLSRV1"
+MANIFEST_VERSION = 1
+
+
+class LoadedArtifact(NamedTuple):
+    learner: WeakLearner
+    spec: LearnerSpec
+    ensemble: boosting.Ensemble
+    committee_size: int | None  # DistBoost.F stores a committee per slot
+    manifest: dict
+
+    @property
+    def committee(self) -> bool:
+        return self.committee_size is not None
+
+
+def _ensemble_template(
+    spec: LearnerSpec, T: int, committee_size: int | None
+) -> boosting.Ensemble:
+    """The pytree structure an artifact's payload pours back into.
+
+    ``init_ensemble`` is shape-deterministic (keys only seed values), so
+    saver and loader independently derive the same treedef + leaf
+    shapes from the manifest alone."""
+    learner = get_learner(spec.name)
+    return boosting.init_ensemble(
+        learner, spec, T, jax.random.PRNGKey(0), committee_size=committee_size
+    )
+
+
+def save_artifact(
+    path: str | Path,
+    spec: LearnerSpec,
+    ensemble: boosting.Ensemble,
+    *,
+    committee_size: int | None = None,
+    extra: dict | None = None,
+) -> Path:
+    """Write a single-file serving artifact; returns the path."""
+    path = Path(path)
+    template = _ensemble_template(spec, ensemble.alpha.shape[0], committee_size)
+    got = [(tuple(l.shape), str(l.dtype)) for l in jax.tree.leaves(ensemble)]
+    want = [(tuple(l.shape), str(l.dtype)) for l in jax.tree.leaves(template)]
+    if got != want:
+        raise ValueError(
+            f"ensemble does not match the {spec.name!r} template: {got} != {want}"
+        )
+    (payload,) = serialize(ensemble, packed=True)
+    manifest = {
+        "format_version": MANIFEST_VERSION,
+        "learner": spec.name,
+        "n_features": spec.n_features,
+        "n_classes": spec.n_classes,
+        "hparams": dict(spec.hparams),
+        "ensemble_capacity": int(ensemble.alpha.shape[0]),
+        "ensemble_count": int(ensemble.count),
+        "committee_size": committee_size,
+        "payload_bytes": len(payload),
+        "payload_crc32": zlib.crc32(payload),
+    }
+    overlap = set(extra or {}) & set(manifest)
+    if overlap:
+        raise ValueError(f"extra manifest keys shadow required fields: {sorted(overlap)}")
+    manifest.update(extra or {})
+    blob = json.dumps(manifest, sort_keys=True).encode()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(blob)))
+        f.write(blob)
+        f.write(payload)
+    return path
+
+
+def load_artifact(path: str | Path) -> LoadedArtifact:
+    data = Path(path).read_bytes()
+    if data[: len(MAGIC)] != MAGIC:
+        raise ValueError(f"{path}: not a MAFL serving artifact (bad magic)")
+    off = len(MAGIC)
+    (mlen,) = struct.unpack("<I", data[off : off + 4])
+    off += 4
+    manifest = json.loads(data[off : off + mlen].decode())
+    payload = data[off + mlen :]
+    if manifest["format_version"] > MANIFEST_VERSION:
+        raise ValueError(
+            f"{path}: artifact format v{manifest['format_version']} is newer "
+            f"than this reader (v{MANIFEST_VERSION})"
+        )
+    if len(payload) != manifest["payload_bytes"]:
+        raise ValueError(
+            f"{path}: truncated payload ({len(payload)} != {manifest['payload_bytes']} bytes)"
+        )
+    if zlib.crc32(payload) != manifest["payload_crc32"]:
+        raise ValueError(f"{path}: payload checksum mismatch")
+    spec = LearnerSpec(
+        manifest["learner"],
+        manifest["n_features"],
+        manifest["n_classes"],
+        dict(manifest["hparams"]),
+    )
+    template = _ensemble_template(
+        spec, manifest["ensemble_capacity"], manifest["committee_size"]
+    )
+    ensemble = deserialize([payload], wire_format(template), packed=True)
+    ensemble = jax.tree.map(jax.numpy.asarray, ensemble)
+    return LoadedArtifact(
+        learner=get_learner(spec.name),
+        spec=spec,
+        ensemble=ensemble,
+        committee_size=manifest["committee_size"],
+        manifest=manifest,
+    )

@@ -1,0 +1,147 @@
+"""Shard-resident incremental vote cache.
+
+Serving traffic at scale is not uniformly fresh: evaluation sets,
+dashboards, and hot user cohorts hit the same feature rows repeatedly,
+and a federation that keeps training appends ensemble members between
+requests.  Rescoring all T members on every request wastes exactly the
+work the predict-once engine eliminated from training.
+
+``ShardVoteCache`` extends ``core/scoring.VoteTally`` into serving: a
+registered shard keeps its ``[n, K]`` alpha-weighted vote tally resident,
+so
+
+  * a repeat request is a pure ``argmax`` over the tally — ZERO member
+    predicts (a cache hit);
+  * after the ensemble grows, the next request folds in only the newly
+    appended members — O(new members), not O(T) (a partial hit);
+
+which is the ROADMAP's "shard-resident eval cache" for
+millions-of-users serving.  Everything stays jit-warm: the tally
+refresh is one jitted ``tally_new_votes`` whose trip count is a traced
+scalar, so ensemble growth never recompiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, Dict, Hashable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import boosting, scoring
+from repro.learners.base import LearnerSpec, WeakLearner
+
+
+@dataclasses.dataclass
+class _Resident:
+    X: jax.Array  # [n, d] — the shard's rows, pinned for member predicts
+    tally: scoring.VoteTally  # [n, K] running votes over members [0, counted)
+    fingerprint: tuple  # (shape, crc32 of rows) — guards against key reuse
+    counted: int = 0  # host mirror of tally.counted (no per-request sync)
+
+
+def _fingerprint(X) -> tuple:
+    arr = np.ascontiguousarray(np.asarray(X))
+    return (arr.shape, zlib.crc32(arr.tobytes()))
+
+
+class ShardVoteCache:
+    def __init__(
+        self,
+        learner: WeakLearner,
+        spec: LearnerSpec,
+        ensemble: boosting.Ensemble,
+        *,
+        committee: bool = False,
+    ):
+        self.learner = learner
+        self.spec = spec
+        self.ensemble = ensemble
+        self.committee = committee
+        # host mirrors so the hit path never blocks on a device scalar
+        self._count = int(ensemble.count)
+        self._alpha_crc = self._alpha_prefix_crc(ensemble, self._count)
+        self._shards: Dict[Hashable, _Resident] = {}
+        self.hits = 0  # requests answered from the tally alone
+        self.partial_hits = 0  # requests that folded only new members
+        self.misses = 0  # first-contact requests (full tally build)
+        self.members_folded = 0  # total member-predict passes actually run
+        learner_, spec_, committee_ = learner, spec, committee
+
+        def _refresh(ens, tally, X):
+            return scoring.tally_new_votes(
+                learner_, spec_, ens, tally, X, committee=committee_
+            )
+
+        self._refresh = jax.jit(_refresh)
+        self._argmax = jax.jit(scoring.tally_predict)
+
+    def register(self, key: Hashable, X) -> None:
+        """Pin a shard resident with an empty tally (no predicts yet)."""
+        fp = _fingerprint(X)
+        X = jnp.asarray(X, jnp.float32)
+        self._shards[key] = _Resident(
+            X=X,
+            tally=scoring.init_tally(X.shape[0], self.spec.n_classes),
+            fingerprint=fp,
+        )
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._shards
+
+    def predict(self, key: Hashable, X=None) -> np.ndarray:
+        """Serve one resident shard; builds residency on first contact."""
+        if key not in self._shards:
+            if X is None:
+                raise KeyError(f"shard {key!r} not resident and no rows given")
+            self.register(key, X)
+        elif X is not None and _fingerprint(X) != self._shards[key].fingerprint:
+            # key reuse with different rows: the old tally answers the OLD
+            # rows — re-register so the caller never gets stale predictions
+            self.register(key, X)
+        shard = self._shards[key]
+        new = self._count - shard.counted
+        if new == 0:
+            self.hits += 1
+        else:
+            if shard.counted == 0:
+                self.misses += 1  # full tally build (first contact)
+            else:
+                self.partial_hits += 1  # folds only the appended members
+            shard.tally = self._refresh(self.ensemble, shard.tally, shard.X)
+            shard.counted = self._count
+            self.members_folded += new
+        return np.asarray(self._argmax(shard.tally))
+
+    @staticmethod
+    def _alpha_prefix_crc(ensemble: boosting.Ensemble, count: int) -> int:
+        return zlib.crc32(np.ascontiguousarray(ensemble.alpha[:count]).tobytes())
+
+    def update_ensemble(self, ensemble: boosting.Ensemble) -> None:
+        """Swap in a grown ensemble; resident tallies refresh lazily on the
+        next request, each folding only the appended members."""
+        count = int(ensemble.count)
+        if count < self._count:
+            raise ValueError("ensemble shrank; serving caches only grow")
+        # resident tallies hold votes of members [0, counted): replacing an
+        # already-tallied member would silently serve the old model forever,
+        # so reject anything that is not a pure append
+        if self._alpha_prefix_crc(ensemble, self._count) != self._alpha_crc:
+            raise ValueError(
+                "already-tallied ensemble members changed; serving caches are "
+                "append-only — build a new ShardVoteCache for a retrained model"
+            )
+        self.ensemble = ensemble
+        self._count = count
+        self._alpha_crc = self._alpha_prefix_crc(ensemble, count)
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "shards": len(self._shards),
+            "hits": self.hits,
+            "partial_hits": self.partial_hits,
+            "misses": self.misses,
+            "members_folded": self.members_folded,
+        }

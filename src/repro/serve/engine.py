@@ -1,0 +1,190 @@
+"""Fixed-shape micro-batching inference engine.
+
+Serving traffic arrives as ragged row groups; XLA wants static shapes.
+The engine packs incoming rows into static ``[B, d]`` batches (padding
+the ragged tail), runs ONE jitted ensemble predict per batch — compiled
+once per batch size and kept warm in a compile cache — and reduces the
+members' votes with the ``vote_argmax`` kernel (Pallas on TPU, pure-jnp
+oracle elsewhere; the oracle is bit-for-bit ``boosting.strong_predict``).
+
+Every learner serves behind the same API because the predict signature
+is uniform across the registry (``predict(spec, params, X) -> [n] i32``,
+with DistBoost.F committees folded by ``scoring.member_prediction``) —
+the serving-side payoff of model-agnosticism.
+
+Two entry points:
+
+  * ``predict(X)``        — synchronous: chunk, pad, run, unpad;
+  * ``submit(X)/flush()`` — the micro-batching scheduler: rows queue
+    until a full batch packs (or ``flush`` pads the remainder), results
+    land in ``results`` keyed by the returned request ids.
+
+``update_ensemble`` swaps in a grown ensemble without recompiling
+(slot-buffer shapes are static; only ``count`` moves).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Deque, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import boosting, scoring
+from repro.kernels import ops
+from repro.learners.base import LearnerSpec, WeakLearner
+
+
+# Rolling reservoir size for latency samples: enough for stable p99 at
+# any traffic level while keeping a long-lived engine's memory bounded.
+STATS_WINDOW = 100_000
+
+
+@dataclasses.dataclass
+class EngineStats:
+    requests: int = 0
+    batches: int = 0
+    padded_rows: int = 0
+    compiles: int = 0
+    batch_seconds: Deque[float] = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=STATS_WINDOW)
+    )
+    # per-request seconds from submit() to result availability (scheduler
+    # path) — a rolling window, not the full history
+    request_latencies: Deque[float] = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=STATS_WINDOW)
+    )
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        learner: WeakLearner,
+        spec: LearnerSpec,
+        ensemble: boosting.Ensemble,
+        *,
+        batch_size: int = 256,
+        committee: bool = False,
+        use_pallas: bool = False,
+    ):
+        self.learner = learner
+        self.spec = spec
+        self.ensemble = ensemble
+        self.batch_size = int(batch_size)
+        self.committee = committee
+        self.use_pallas = use_pallas
+        self.stats = EngineStats()
+        self._fns: Dict[int, Callable] = {}  # warm compile cache: B -> jitted
+        # (id, row, t_submit); deque so batch draining is O(B), not a slice-copy
+        self._queue: Deque[tuple[int, np.ndarray, float]] = collections.deque()
+        self._next_id = 0
+        # id -> predicted class; consume with ``take`` — results not taken
+        # stay here, so a long-lived engine must pop what it reads
+        self.results: Dict[int, int] = {}
+
+    # -- the one jitted predict per (learner, B) ---------------------------
+    def _fn(self, B: int) -> Callable:
+        if B not in self._fns:
+            learner, spec, committee = self.learner, self.spec, self.committee
+            use_pallas = self.use_pallas
+
+            def batch_predict(params, alpha, count, Xb):
+                T = alpha.shape[0]
+                member = lambda t: scoring.member_prediction(
+                    learner, spec, scoring._take_slot(params, t), Xb,
+                    committee=committee,
+                )
+                preds = jax.vmap(member)(jnp.arange(T))  # [T, B]
+                used = (jnp.arange(T) < count).astype(jnp.float32) * alpha
+                return ops.vote_argmax(
+                    preds, used, n_classes=spec.n_classes, use_pallas=use_pallas
+                )
+
+            self._fns[B] = jax.jit(batch_predict)
+            self.stats.compiles += 1
+        return self._fns[B]
+
+    def warmup(self) -> None:
+        """Pre-compile the steady-state batch shape."""
+        X = jnp.zeros((self.batch_size, self.spec.n_features), jnp.float32)
+        ens = self.ensemble
+        jax.block_until_ready(self._fn(self.batch_size)(ens.params, ens.alpha, ens.count, X))
+
+    def _run_batch(self, Xb: jax.Array, n_valid: int) -> np.ndarray:
+        """One static [B, d] batch; returns the n_valid un-padded answers."""
+        B = Xb.shape[0]
+        ens = self.ensemble
+        t0 = time.perf_counter()
+        out = self._fn(B)(ens.params, ens.alpha, ens.count, Xb)
+        out = np.asarray(out)  # device sync = response ready
+        self.stats.batch_seconds.append(time.perf_counter() - t0)
+        self.stats.batches += 1
+        self.stats.padded_rows += B - n_valid
+        return out[:n_valid]
+
+    def _pack(self, rows: np.ndarray) -> jax.Array:
+        n = rows.shape[0]
+        if n < self.batch_size:  # pad the ragged tail to the static shape
+            pad = np.zeros((self.batch_size - n, rows.shape[1]), rows.dtype)
+            rows = np.concatenate([rows, pad], axis=0)
+        return jnp.asarray(rows, jnp.float32)
+
+    # -- synchronous path ---------------------------------------------------
+    def predict(self, X) -> np.ndarray:
+        """Serve a whole [m, d] matrix through static batches."""
+        X = np.asarray(X, np.float32)
+        self.stats.requests += X.shape[0]
+        out = [
+            self._run_batch(
+                self._pack(X[i : i + self.batch_size]),
+                min(self.batch_size, X.shape[0] - i),
+            )
+            for i in range(0, X.shape[0], self.batch_size)
+        ]
+        return np.concatenate(out) if out else np.zeros((0,), np.int32)
+
+    # -- micro-batching scheduler ------------------------------------------
+    def submit(self, X) -> List[int]:
+        """Queue rows; full batches run immediately.  Returns request ids
+        (answers appear in ``self.results``; ``flush`` forces the tail)."""
+        X = np.atleast_2d(np.asarray(X, np.float32))
+        now = time.perf_counter()
+        ids = []
+        for row in X:
+            self._queue.append((self._next_id, row, now))
+            ids.append(self._next_id)
+            self._next_id += 1
+        self.stats.requests += len(ids)
+        while len(self._queue) >= self.batch_size:
+            self._dispatch([self._queue.popleft() for _ in range(self.batch_size)])
+        return ids
+
+    def flush(self) -> None:
+        """Run the pending partial batch, padded to the static shape."""
+        if self._queue:
+            self._dispatch(list(self._queue))
+            self._queue.clear()
+
+    def take(self, rid: int) -> int:
+        """Pop one answered request — the memory-bounded way to read
+        results (a dropped id would otherwise pin its entry forever)."""
+        return self.results.pop(rid)
+
+    def _dispatch(self, entries) -> None:
+        rows = np.stack([r for _, r, _ in entries])
+        preds = self._run_batch(self._pack(rows), len(entries))
+        done = time.perf_counter()
+        for (rid, _, t_submit), p in zip(entries, preds):
+            self.results[rid] = int(p)
+            self.stats.request_latencies.append(done - t_submit)
+
+    # -- live ensemble swap -------------------------------------------------
+    def update_ensemble(self, ensemble: boosting.Ensemble) -> None:
+        """Swap in a grown ensemble; shapes are static so the warm compile
+        cache (keyed by batch size only) stays valid."""
+        if ensemble.alpha.shape != self.ensemble.alpha.shape:
+            raise ValueError("ensemble capacity changed; build a new engine")
+        self.ensemble = ensemble

@@ -1,0 +1,286 @@
+"""Serving subsystem: artifact save→load→predict round-trip for every
+registered learner, engine-vs-strong_predict bit-for-bit parity on
+ragged final batches, vote-cache correctness across ensemble growth,
+vote_argmax kernel parity, and fit-cache round equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import boosting
+from repro.kernels import ref
+from repro.kernels.vote_argmax import vote_argmax
+from repro.learners import LearnerSpec, available_learners, get_learner
+from repro.serve import ServeEngine, ShardVoteCache, load_artifact, save_artifact
+
+HPARAMS = {
+    "decision_tree": {"depth": 3, "n_bins": 8},
+    "extra_tree": {"depth": 3, "n_bins": 8, "max_candidates": 16},
+    "ridge": {"l2": 1.0},
+    "mlp": {"hidden": 16, "steps": 30, "lr": 0.05},
+    "gaussian_nb": {},
+    "nearest_centroid": {},
+}
+
+
+def _blobs(key, n=240, d=6, K=3, sep=3.0):
+    kc, kx, ky = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (K, d)) * sep
+    y = jax.random.randint(ky, (n,), 0, K)
+    return centers[y] + jax.random.normal(kx, (n, d)), y
+
+
+def _small_ensemble(name, key, T=3, committee_size=None):
+    """A tiny trained ensemble for `name` (fits T members directly)."""
+    X, y = _blobs(key)
+    spec = LearnerSpec(name, X.shape[1], 3, HPARAMS[name])
+    learner = get_learner(name)
+    ens = boosting.init_ensemble(learner, spec, T, key, committee_size=committee_size)
+    w = jnp.ones(y.shape, jnp.float32)
+    for t in range(T):
+        kt = jax.random.fold_in(key, t)
+        p = learner.fit(spec, None, X, y, w * (0.5 + 0.5 * t), kt)
+        if committee_size is not None:
+            p = jax.tree.map(lambda x: jnp.broadcast_to(x, (committee_size,) + x.shape), p)
+        ens = boosting.Ensemble(
+            params=boosting._set_slot(ens.params, ens.count, p),
+            alpha=ens.alpha.at[ens.count].set(0.3 + 0.2 * t),
+            count=ens.count + 1,
+        )
+    return learner, spec, ens, X
+
+
+# ---------------------------------------------------------------------------
+# Artifact round-trip — every learner in the registry
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(HPARAMS))
+def test_artifact_roundtrip_every_learner(name, tmp_path):
+    assert name in available_learners()
+    learner, spec, ens, X = _small_ensemble(name, jax.random.PRNGKey(0))
+    path = save_artifact(tmp_path / f"{name}.mafl", spec, ens)
+    art = load_artifact(path)
+    assert art.spec == spec and not art.committee
+    assert art.manifest["ensemble_count"] == 3
+    want = boosting.strong_predict(learner, spec, ens, X)
+    got = boosting.strong_predict(art.learner, art.spec, art.ensemble, X)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_artifact_roundtrip_committee(tmp_path):
+    """DistBoost.F artifacts carry a committee per slot."""
+    learner, spec, ens, X = _small_ensemble(
+        "nearest_centroid", jax.random.PRNGKey(1), committee_size=2
+    )
+    path = save_artifact(tmp_path / "c.mafl", spec, ens, committee_size=2)
+    art = load_artifact(path)
+    assert art.committee and art.committee_size == 2
+    want = boosting.strong_predict(learner, spec, ens, X, committee=True)
+    got = boosting.strong_predict(art.learner, art.spec, art.ensemble, X, committee=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_artifact_rejects_shadowing_extra_keys(tmp_path):
+    _, spec, ens, _ = _small_ensemble("ridge", jax.random.PRNGKey(2))
+    with pytest.raises(ValueError, match="shadow"):
+        save_artifact(tmp_path / "x.mafl", spec, ens, extra={"payload_crc32": 0})
+
+
+def test_artifact_rejects_corruption(tmp_path):
+    _, spec, ens, _ = _small_ensemble("ridge", jax.random.PRNGKey(2))
+    path = save_artifact(tmp_path / "r.mafl", spec, ens)
+    blob = bytearray(path.read_bytes())
+    blob[-3] ^= 0xFF  # flip a payload bit
+    path.write_bytes(bytes(blob))
+    with pytest.raises(ValueError, match="checksum"):
+        load_artifact(path)
+
+
+# ---------------------------------------------------------------------------
+# Engine — bit-for-bit vs strong_predict, ragged tail included
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["decision_tree", "gaussian_nb"])
+@pytest.mark.parametrize("m,B", [(333, 128), (64, 64), (5, 256)])
+def test_engine_bitforbit_vs_strong_predict(name, m, B):
+    learner, spec, ens, _ = _small_ensemble(name, jax.random.PRNGKey(3))
+    X, _ = _blobs(jax.random.PRNGKey(4), n=m)
+    want = np.asarray(boosting.strong_predict(learner, spec, ens, X))
+    engine = ServeEngine(learner, spec, ens, batch_size=B)
+    np.testing.assert_array_equal(engine.predict(np.asarray(X)), want)
+    # ragged tail was padded up to the static batch shape
+    assert engine.stats.batches == -(-m // B)
+    assert engine.stats.padded_rows == engine.stats.batches * B - m
+
+
+def test_engine_serves_committee_artifacts(tmp_path):
+    """A DistBoost.F artifact must serve with committee vote folding."""
+    learner, spec, ens, X = _small_ensemble(
+        "nearest_centroid", jax.random.PRNGKey(14), committee_size=2
+    )
+    art = load_artifact(
+        save_artifact(tmp_path / "c.mafl", spec, ens, committee_size=2)
+    )
+    want = np.asarray(
+        boosting.strong_predict(art.learner, art.spec, art.ensemble, X, committee=True)
+    )
+    engine = ServeEngine(
+        art.learner, art.spec, art.ensemble, batch_size=64, committee=art.committee
+    )
+    np.testing.assert_array_equal(engine.predict(np.asarray(X)), want)
+    cache = ShardVoteCache(
+        art.learner, art.spec, art.ensemble, committee=art.committee
+    )
+    np.testing.assert_array_equal(cache.predict("s", X), want)
+
+
+@pytest.mark.parametrize("name", sorted(HPARAMS))
+def test_every_learner_serves_behind_one_api(name):
+    """The predict-signature audit: every registry entry serves through
+    the same engine code path, ragged tail included, bit for bit."""
+    learner, spec, ens, _ = _small_ensemble(name, jax.random.PRNGKey(20))
+    X, _ = _blobs(jax.random.PRNGKey(21), n=100)
+    want = np.asarray(boosting.strong_predict(learner, spec, ens, X))
+    got = ServeEngine(learner, spec, ens, batch_size=64).predict(np.asarray(X))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_engine_scheduler_matches_sync_path():
+    learner, spec, ens, _ = _small_ensemble("decision_tree", jax.random.PRNGKey(5))
+    X, _ = _blobs(jax.random.PRNGKey(6), n=150)
+    Xn = np.asarray(X)
+    engine = ServeEngine(learner, spec, ens, batch_size=64)
+    want = engine.predict(Xn)
+    sched = ServeEngine(learner, spec, ens, batch_size=64)
+    ids = []
+    for i in range(0, 150, 7):  # ragged request stream
+        ids.extend(sched.submit(Xn[i : i + 7]))
+    assert len(sched.results) == 128  # two full batches ran eagerly
+    sched.flush()
+    np.testing.assert_array_equal(np.array([sched.take(i) for i in ids]), want)
+    assert not sched.results  # take() pops: nothing pinned after reading
+    assert len(sched.stats.request_latencies) == 150
+
+
+def test_engine_compile_cache_is_warm_across_batches():
+    learner, spec, ens, _ = _small_ensemble("ridge", jax.random.PRNGKey(7))
+    X, _ = _blobs(jax.random.PRNGKey(8), n=500)
+    engine = ServeEngine(learner, spec, ens, batch_size=128)
+    engine.predict(np.asarray(X))
+    assert engine.stats.batches == 4
+    assert engine.stats.compiles == 1  # one jitted predict per (learner, B)
+    # a grown ensemble must NOT recompile (static slot shapes)
+    engine.update_ensemble(ens._replace(count=ens.count - 1))
+    engine.predict(np.asarray(X))
+    assert engine.stats.compiles == 1
+
+
+# ---------------------------------------------------------------------------
+# Shard-resident vote cache — correctness while the ensemble grows
+# ---------------------------------------------------------------------------
+
+
+def test_vote_cache_correct_when_ensemble_grows():
+    key = jax.random.PRNGKey(9)
+    X, y = _blobs(key, n=300)
+    spec = LearnerSpec("decision_tree", X.shape[1], 3, HPARAMS["decision_tree"])
+    learner = get_learner("decision_tree")
+    Xs, ys = X[None], y[None]
+    masks = jnp.ones(ys.shape, jnp.float32)
+    state = boosting.init_boost_state(learner, spec, 6, masks, key, X=Xs)
+    rfn = jax.jit(lambda s: boosting.adaboost_f_round(learner, spec, s, Xs, ys, masks))
+    for _ in range(3):
+        state, _ = rfn(state)
+
+    Xq, _ = _blobs(jax.random.PRNGKey(10), n=111)
+    cache = ShardVoteCache(learner, spec, state.ensemble)
+    p1 = cache.predict("q", Xq)  # miss: full tally build
+    want = np.asarray(boosting.strong_predict(learner, spec, state.ensemble, Xq))
+    np.testing.assert_array_equal(p1, want)
+    np.testing.assert_array_equal(cache.predict("q"), want)  # pure hit
+
+    for _ in range(3):  # the federation keeps training between requests
+        state, _ = rfn(state)
+    cache.update_ensemble(state.ensemble)
+    p2 = cache.predict("q")  # partial hit: folds ONLY the 3 new members
+    want2 = np.asarray(boosting.strong_predict(learner, spec, state.ensemble, Xq))
+    np.testing.assert_array_equal(p2, want2)
+    assert cache.stats() == {
+        "shards": 1, "hits": 1, "partial_hits": 1, "misses": 1,
+        "members_folded": 6,
+    }
+    with pytest.raises(ValueError, match="shrank"):
+        cache.update_ensemble(state.ensemble._replace(count=jnp.zeros((), jnp.int32)))
+    # replacing already-tallied members (a retrain, not an append) must be
+    # rejected — the resident tallies would silently serve the old model
+    mutated = state.ensemble._replace(alpha=state.ensemble.alpha.at[0].mul(2.0))
+    with pytest.raises(ValueError, match="append-only"):
+        cache.update_ensemble(mutated)
+
+    # key reuse with DIFFERENT rows must re-register, never serve the old
+    # shard's tally for the new rows
+    Xq2, _ = _blobs(jax.random.PRNGKey(22), n=111)
+    p3 = cache.predict("q", Xq2)
+    want3 = np.asarray(boosting.strong_predict(learner, spec, state.ensemble, Xq2))
+    np.testing.assert_array_equal(p3, want3)
+
+
+# ---------------------------------------------------------------------------
+# vote_argmax kernel parity (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("T,n,K,block_t,block_n", [
+    (13, 1000, 7, 8, 256),   # T % block_t != 0, n % block_n != 0
+    (5, 31, 3, 32, 1024),    # everything smaller than one block
+    (33, 2049, 10, 16, 512), # n one past a block boundary
+])
+def test_vote_argmax_kernel_parity(T, n, K, block_t, block_n):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(T * n), 2)
+    preds = jax.random.randint(k1, (T, n), 0, K)
+    # half-integer alphas: vote sums are exact in f32, so kernel block
+    # order cannot flip the argmax and parity is exact
+    alpha = jax.random.randint(k2, (T,), 1, 9).astype(jnp.float32) * 0.5
+    alpha = alpha * (jnp.arange(T) < T - 2)  # unused tail slots vote 0
+    got = vote_argmax(preds, alpha, n_classes=K, block_t=block_t,
+                      block_n=block_n, interpret=True)
+    want = ref.vote_argmax_ref(preds, alpha, K)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_engine_pallas_path_matches_ref_path():
+    learner, spec, ens, _ = _small_ensemble("decision_tree", jax.random.PRNGKey(11))
+    X, _ = _blobs(jax.random.PRNGKey(12), n=200)
+    ref_pred = ServeEngine(learner, spec, ens, batch_size=64).predict(np.asarray(X))
+    pal_pred = ServeEngine(
+        learner, spec, ens, batch_size=64, use_pallas=True
+    ).predict(np.asarray(X))
+    np.testing.assert_array_equal(ref_pred, pal_pred)
+
+
+# ---------------------------------------------------------------------------
+# Fit cache (quantile bin edges) — cached rounds identical to uncached
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["decision_tree", "extra_tree"])
+def test_fit_cache_rounds_bitforbit(name):
+    key = jax.random.PRNGKey(13)
+    X, y = _blobs(key, n=260)
+    spec = LearnerSpec(name, X.shape[1], 3, HPARAMS[name])
+    learner = get_learner(name)
+    Xs, ys = jnp.stack([X[:130], X[130:]]), jnp.stack([y[:130], y[130:]])
+    masks = jnp.ones(ys.shape, jnp.float32)
+    s_plain = boosting.init_boost_state(learner, spec, 3, masks, key)
+    s_cached = boosting.init_boost_state(learner, spec, 3, masks, key, X=Xs)
+    assert s_plain.fit_cache is None and s_cached.fit_cache is not None
+    for _ in range(3):
+        s_plain, m_p = boosting.adaboost_f_round(learner, spec, s_plain, Xs, ys, masks)
+        s_cached, m_c = boosting.adaboost_f_round(learner, spec, s_cached, Xs, ys, masks)
+        assert int(m_p["chosen"]) == int(m_c["chosen"])
+    np.testing.assert_array_equal(np.asarray(s_plain.weights), np.asarray(s_cached.weights))
+    np.testing.assert_array_equal(
+        np.asarray(s_plain.ensemble.alpha), np.asarray(s_cached.ensemble.alpha)
+    )
