@@ -17,7 +17,12 @@ def main(quick: bool = False) -> None:
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 8)
 
-    # tree_hist sweep
+    # tree_hist sweep: parity via the interpret-mode kernel, timings via
+    # the ops dispatch (Pallas on TPU, jnp oracle on CPU — interpret-mode
+    # wall time is not a perf signal; the kernel targets TPU like the
+    # rest).  `path` records which side a row measured.
+    on_tpu = jax.default_backend() == "tpu"
+    path = "pallas" if on_tpu else "ref"
     sweeps = [(2048, 14, 8, 17, 2), (4096, 54, 16, 17, 7)]
     if quick:
         sweeps = sweeps[:1]
@@ -29,12 +34,28 @@ def main(quick: bool = False) -> None:
                           use_pallas=True, block_s=512, block_d=8)
         b = ref.tree_hist_ref(bin_idx, leaf, wy, L, B1)
         err = float(jnp.max(jnp.abs(a - b)))
-        t = timeit(
-            lambda: jax.block_until_ready(
-                ref.tree_hist_ref(bin_idx, leaf, wy, L, B1)
-            )
-        )
-        rep.add(f"tree_hist_n{n}_d{d}_K{K}", us_per_call=t * 1e6, max_err=err)
+        fn = jax.jit(lambda bi, lf, w: ops.tree_hist(
+            bi, lf, w, n_leaves=L, n_bins_p1=B1, use_pallas=on_tpu))
+        t = timeit(lambda: jax.block_until_ready(fn(bin_idx, leaf, wy)))
+        rep.add(f"tree_hist_n{n}_d{d}_K{K}", us_per_call=t * 1e6, max_err=err,
+                path=path)
+
+    # batched tree_hist: the federation's C local fits as ONE launch (the
+    # batch axis folds into the kernel grid) vs C separate oracle calls.
+    C, n, d, L, B1, K = (4, 1024, 14, 8, 17, 2) if quick else (8, 2048, 14, 8, 17, 2)
+    bin_idx = jax.random.randint(ks[3], (C, n, d), 0, B1)
+    leaf = jax.random.randint(ks[4], (C, n), 0, L)
+    wy = jax.random.uniform(ks[5], (C, n, K))
+    a = ops.tree_hist(bin_idx, leaf, wy, n_leaves=L, n_bins_p1=B1,
+                      use_pallas=True, block_s=512, block_d=8)
+    b = ref.tree_hist_batched_ref(bin_idx, leaf, wy, L, B1)
+    err = float(jnp.max(jnp.abs(a - b)))
+    fn = jax.jit(lambda bi, lf, w: ops.tree_hist(
+        bi, lf, w, n_leaves=L, n_bins_p1=B1, use_pallas=on_tpu))
+    t = timeit(lambda: jax.block_until_ready(fn(bin_idx, leaf, wy)))
+    rep.add(f"tree_hist_batched_C{C}_n{n}_d{d}_K{K}", us_per_call=t * 1e6,
+            max_err=err, path=path,
+            gcells_per_s=round(C * n * d / t / 1e9, 3))
 
     # flash attention sweep
     for (S, T, Hq, Hkv, win, cap) in [(256, 256, 8, 2, None, None), (256, 256, 4, 4, 128, 50.0)]:
@@ -58,8 +79,6 @@ def main(quick: bool = False) -> None:
     # follow the ops dispatch: the Pallas kernel on TPU, the jnp oracle on
     # CPU (interpret-mode wall time is not a perf signal) — the `path`
     # column records which one a row measured.
-    on_tpu = jax.default_backend() == "tpu"
-    path = "pallas" if on_tpu else "ref"
     err_sweeps = [(16, 65536), (33, 4097), (120, 32768)]
     if quick:
         err_sweeps = err_sweeps[:2]

@@ -14,6 +14,14 @@ optimisations, reproduced with the TPU/JAX analogues:
   +pred_cache       predict-once caches: incremental ensemble eval and,
                     for PreWeak.F, the setup-time [C, C*T, n] prediction
                     cache of the static hypothesis space (beyond paper)
+  +tree_hist        kernel-backed batched tree fitting (beyond paper):
+                    all C local fits run as ONE tensor program over the
+                    BinnedDataset cache, and the per-level histogram is
+                    a single Pallas ``tree_hist`` launch.  Off-TPU the
+                    kernel runs in interpret mode, so on CPU this stage
+                    measures ablation STRUCTURE only (it is slower than
+                    +pred_cache here; the kernel speedup claim is
+                    TPU-only, like +pallas_scoring).
 
 Sleeps are scaled 40x down from the paper's (10s, 1s) so the benchmark
 finishes on CPU; the RELATIVE ablation structure is what is reproduced.
@@ -23,6 +31,13 @@ A second section times PreWeak.F's fused path cached vs uncached — the
 pred cache turns every round into a pure weighted reduction, which is
 where the predict-once engine pays off hardest (O(H*n) per round instead
 of O(H*n*predict)).
+
+A third section (``--tree-hist-only`` runs just this one) ablates the
+fit path of the fused AdaBoost.F round on the ORACLE dispatch — the
+CPU-measurable part of the tree-fitting pipeline: per-round
+quantile+digitize -> edges-only cache (digitize per round) ->
+BinnedDataset cache (digitize off the round path) -> batched one-call
+local fits.
 """
 from __future__ import annotations
 
@@ -54,6 +69,7 @@ def _flags(**on):
         fused_round=on.get("fused", False),
         use_pallas=on.get("pallas", False),
         cache_predictions=on.get("cache", False),
+        batched_fit=on.get("tree", False),
     )
 
 
@@ -67,6 +83,9 @@ STAGES = [
      _flags(packed=True, bounded=True, barrier=True, fused=True, pallas=True)),
     ("+pred_cache",
      _flags(packed=True, bounded=True, barrier=True, fused=True, pallas=True, cache=True)),
+    ("+tree_hist",
+     _flags(packed=True, bounded=True, barrier=True, fused=True, pallas=True, cache=True,
+            tree=True)),
 ]
 
 
@@ -84,7 +103,7 @@ def _timed_run(plan, Xs, ys, masks, Xte, yte, lspec, key, repeats):
     return sorted(times)[len(times) // 2], fed
 
 
-def main(quick: bool = False) -> None:
+def main(quick: bool = False, tree_hist_only: bool = False) -> None:
     rep = Reporter("optimizations_fig3")
     rounds = 5 if quick else 15
     repeats = 1 if quick else 3
@@ -94,6 +113,12 @@ def main(quick: bool = False) -> None:
     Xs, ys, masks = iid_partition(Xtr, ytr, 8, k2)
     lspec = LearnerSpec("decision_tree", dspec.n_features, dspec.n_classes,
                         {"depth": 4, "n_bins": 16})
+
+    if tree_hist_only:  # CI bench-smoke: just the fit-path ablation
+        for row in _binned_fit_ablation(Xs, ys, masks, lspec, k3, rounds, repeats):
+            rep.add(row.pop("name"), **row)
+        rep.finish()
+        return
 
     base_time = None
     for name, flags in STAGES:
@@ -170,6 +195,10 @@ def main(quick: bool = False) -> None:
             speedup_vs_uncached=round(pw_base / t, 2),
         )
 
+    # -- fused AdaBoost.F: fit-path (BinnedDataset / batched) ablation ------
+    for row in _binned_fit_ablation(Xs, ys, masks, lspec, k3, rounds, repeats):
+        rep.add(row.pop("name"), **row)
+
     # -- SPMD: packed hypothesis broadcast ablation -------------------------
     # One all-gather per round (the whole pytree packed into a single f32
     # wire buffer) vs one all-gather per leaf.  The device count must be
@@ -178,7 +207,72 @@ def main(quick: bool = False) -> None:
     # itself is a multi-host-mesh quantity (see ROADMAP).
     for row in _packed_broadcast_ablation(rounds=3 if quick else 6):
         rep.add(row.pop("name"), **row)
-    rep.finish()
+    # quick runs use fewer rounds/repeats — never let them overwrite the
+    # committed perf-trajectory baseline (BENCH_optimizations_fig3.json)
+    rep.finish(baseline=not quick)
+
+
+def _binned_fit_ablation(Xs, ys, masks, lspec, key, rounds, repeats):
+    """Steady-state fused AdaBoost.F round time across the fit-path
+    cache/batching trajectory, on the ORACLE dispatch (use_pallas=False)
+    so the numbers are CPU-meaningful:
+
+      uncached      pre-cache behaviour: quantile + digitize every round
+      edges_cache   bare-edges fit cache (the pre-binning format; still
+                    digitizes every round) — the ~247 ms/round CPU
+                    adult/C=8 reference point
+      binned_cache  BinnedDataset cache: digitization off the round path
+      binned_batched  + all C local fits as ONE tensor program (tentpole)
+
+    jit compile is excluded (one warmup call per variant); eval is
+    excluded too — this isolates what the fit pipeline changes.
+    """
+    import jax as _jax
+
+    from repro.core import boosting
+    from repro.learners import get_learner
+
+    learner = get_learner(lspec.name)
+    full = boosting.init_boost_state(
+        learner, lspec, rounds, masks, key, X=Xs
+    )
+    no_cache = boosting.BoostState(full.ensemble, full.weights, full.key, None)
+    edges_only = boosting.BoostState(
+        full.ensemble, full.weights, full.key, full.fit_cache.edges
+    )
+    variants = [
+        ("fused_fit_uncached", no_cache, dict(batched_fit=False)),
+        ("fused_fit+edges_cache", edges_only, dict(batched_fit=False)),
+        ("fused_fit+binned_cache", full, dict(batched_fit=False)),
+        ("fused_fit+binned_batched", full, dict(batched_fit=True)),
+    ]
+    rows, base = [], None
+    for name, state, kw in variants:
+        rfn = _jax.jit(
+            lambda s, _kw=kw: boosting.adaboost_f_round(
+                learner, lspec, s, Xs, ys, masks, **_kw
+            )
+        )
+        s, _ = rfn(state)
+        _jax.block_until_ready(s.weights)  # warmup: compile outside the timing
+        times = []
+        for _ in range(repeats):
+            s = state
+            t0 = time.perf_counter()
+            for _ in range(rounds):
+                s, _m = rfn(s)
+            _jax.block_until_ready(s.weights)
+            times.append(time.perf_counter() - t0)
+        t = sorted(times)[len(times) // 2]
+        if base is None:
+            base = t
+        rows.append({
+            "name": name,
+            "us_per_call": round(t / rounds * 1e6, 1),
+            "ms_per_round": round(t / rounds * 1e3, 1),
+            "speedup_vs_uncached": round(base / t, 3),
+        })
+    return rows
 
 
 _PACKED_SCRIPT = textwrap.dedent(
@@ -251,4 +345,6 @@ def _packed_broadcast_ablation(rounds: int):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--tree-hist-only", action="store_true",
+                    help="run only the fit-path (BinnedDataset/batched) ablation")
     main(**vars(ap.parse_args()))

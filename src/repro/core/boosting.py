@@ -96,9 +96,12 @@ class BoostState(NamedTuple):
     ensemble: Ensemble
     weights: jax.Array  # [C, n] — globally normalised sample weights
     key: jax.Array
-    # Per-collaborator X-only fit precomputation (e.g. the tree learners'
-    # quantile bin edges): X is static per collaborator across rounds, so
-    # this is computed once at init and threaded through every round.
+    # Per-collaborator X-only fit precomputation — an arbitrary cache
+    # pytree per the ``WeakLearner.precompute`` contract (the trees carry
+    # a ``learners/binning.py::BinnedDataset``: quantile edges + digitized
+    # bin indices).  X is static per collaborator across rounds, so this
+    # is computed once at init and threaded through every round; fitting
+    # never re-touches the raw shard.
     fit_cache: Any = None
 
 
@@ -125,10 +128,30 @@ def init_boost_state(
     )
 
 
-def _local_fits(learner, spec, w, X, y, key, fit_cache=None):
-    """Train one weak hypothesis per collaborator (paper step 2). [C, ...]"""
+def _local_fits(
+    learner, spec, w, X, y, key, fit_cache=None,
+    *, batched=True, use_pallas=False, block_s=None, block_d=None,
+):
+    """Train one weak hypothesis per collaborator (paper step 2). [C, ...]
+
+    Three routes, fastest available first:
+      * ``fit_batched`` — ONE tensor program fits all C hypotheses
+        (kernel-backed learners issue one launch per stage instead of C);
+        requires the shard-static fit cache and ``batched=True``;
+      * ``vmap(fit_cached)`` — per-collaborator fits reusing the cache;
+      * ``vmap(fit)``       — no cache (X-derived scaffold recomputed).
+    All three agree bit-for-bit on the oracle path (``use_pallas=False``)
+    — regression-tested in tests/test_binning.py.
+    """
     C = X.shape[0]
     keys = jax.random.split(key, C)
+
+    if batched and fit_cache is not None and learner.fit_batched is not None:
+        return learner.fit_batched(
+            spec, X, y, w, keys, fit_cache,
+            use_pallas=use_pallas, block_s=block_s, block_d=block_d,
+        )
+
     dummy = learner.init(spec, key)
 
     if fit_cache is not None and learner.fit_cached is not None:
@@ -162,13 +185,20 @@ def adaboost_f_round(
     mask: jax.Array,
     *,
     use_pallas: bool = False,
+    batched_fit: bool = True,
+    block_s: int | None = None,
+    block_d: int | None = None,
 ) -> Tuple[BoostState, Dict[str, jax.Array]]:
     key, kfit = jax.random.split(state.key)
     w = state.weights
 
-    # step 2: local training + hypothesis-space broadcast (quantile bin
-    # edges etc. come from the round-static fit cache when available)
-    hyps = _local_fits(learner, spec, w, X, y, kfit, state.fit_cache)  # [C, ...]
+    # step 2: local training, all C fits as one batched tensor program
+    # when the learner supports it (BinnedDataset caches etc. come from
+    # the round-static fit cache)
+    hyps = _local_fits(
+        learner, spec, w, X, y, kfit, state.fit_cache,
+        batched=batched_fit, use_pallas=use_pallas, block_s=block_s, block_d=block_d,
+    )  # [C, ...]
     # step 3: predict ONCE per (hypothesis, shard) — every quantity below
     # is a reduction over this tensor, never a second predict
     preds = scoring.predict_tensor(learner, spec, hyps, X)  # [C, C, n]
@@ -202,10 +232,17 @@ def _committee_predict(learner, spec, committee, X):
     return jnp.argmax(tally, axis=-1).astype(jnp.int32)
 
 
-def distboost_f_round(learner, spec, state, X, y, mask, *, use_pallas: bool = False):
+def distboost_f_round(
+    learner, spec, state, X, y, mask, *,
+    use_pallas: bool = False, batched_fit: bool = True,
+    block_s: int | None = None, block_d: int | None = None,
+):
     key, kfit = jax.random.split(state.key)
     w = state.weights
-    committee = _local_fits(learner, spec, w, X, y, kfit, state.fit_cache)  # [C, ...]
+    committee = _local_fits(
+        learner, spec, w, X, y, kfit, state.fit_cache,
+        batched=batched_fit, use_pallas=use_pallas, block_s=block_s, block_d=block_d,
+    )  # [C, ...]
 
     def mis_one(Xi, yi):
         return (_committee_predict(learner, spec, committee, Xi) != yi).astype(jnp.float32)
@@ -241,9 +278,10 @@ def preweak_f_setup(learner, spec, state, X, y, mask, T: int):
     def local_adaboost(Xi, yi, mi, ki, cache_i):
         wi = mi / jnp.maximum(jnp.sum(mi), 1.0)
         dummy = learner.init(spec, ki)
-        # X is static across the T local rounds: the fit cache (quantile
-        # bin edges for trees) comes from the round state when the caller
-        # built one, else is computed once here instead of once per round.
+        # X is static across the T local rounds: the fit cache
+        # (BinnedDataset for trees) comes from the round state when the
+        # caller built one, else is computed once here instead of once
+        # per local round.
         cache = cache_i
         if cache is None and cached:
             cache = learner.precompute(spec, Xi)
@@ -319,11 +357,18 @@ def preweak_f_round(learner, spec, state, hyp_space, X, y, mask, *,
 # ---------------------------------------------------------------------------
 
 
-def bagging_round(learner, spec, state, X, y, mask, *, use_pallas: bool = False):
-    del use_pallas  # no scoring reduction in bagging; kwarg kept for ROUND_FNS uniformity
+def bagging_round(
+    learner, spec, state, X, y, mask, *,
+    use_pallas: bool = False, batched_fit: bool = True,
+    block_s: int | None = None, block_d: int | None = None,
+):
+    # no scoring reduction in bagging — the kernel flags only steer the fit
     key, kfit, kpick = jax.random.split(state.key, 3)
     w = mask / jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)  # local-uniform
-    hyps = _local_fits(learner, spec, w, X, y, kfit, state.fit_cache)
+    hyps = _local_fits(
+        learner, spec, w, X, y, kfit, state.fit_cache,
+        batched=batched_fit, use_pallas=use_pallas, block_s=block_s, block_d=block_d,
+    )
     c = jax.random.randint(kpick, (), 0, X.shape[0])  # rotate members round-robin-ish
     ens = state.ensemble
     ens = Ensemble(

@@ -51,8 +51,9 @@ class OptimizationFlags:
     fused_round: jit the whole federated round as one program
         (removes per-task dispatch overhead; beyond-paper).
     use_pallas: route the step-3/4 scoring reductions (error matrix,
-        fused weight update) through the Pallas TPU kernels in
-        ``kernels/boost_update.py`` instead of the pure-jnp oracles
+        fused weight update) — and, with ``batched_fit``, the step-2
+        tree-fit histogram stage (``kernels/tree_hist.py``) — through
+        the Pallas TPU kernels instead of the pure-jnp oracles
         (beyond-paper; off-TPU backends run the kernels in interpret
         mode, so the default is off — flip on for TPU deployments).
     cache_predictions: predict-once caching (beyond-paper) —
@@ -61,6 +62,15 @@ class OptimizationFlags:
         a pure weighted reduction, and (b) ensemble evaluation keeps a
         running vote tally and scores only newly appended members
         instead of re-predicting all T slots each eval.
+    batched_fit: collaborator-batched local fits (beyond-paper) — the
+        fused round trains all C weak hypotheses as ONE tensor program
+        via ``WeakLearner.fit_batched`` over the shard-static
+        ``BinnedDataset`` fit cache, instead of a vmap of C independent
+        fits; with ``use_pallas`` the per-level histogram is a single
+        ``tree_hist`` kernel launch whose grid folds the batch axis.
+    tree_block_s / tree_block_d: sample/feature tile sizes of the
+        ``tree_hist`` kernel (TPU tuning knobs; ignored on the oracle
+        path).
     """
 
     packed_serialization: bool = True
@@ -70,6 +80,9 @@ class OptimizationFlags:
     fused_round: bool = True
     use_pallas: bool = False
     cache_predictions: bool = True
+    batched_fit: bool = True
+    tree_block_s: int = 512
+    tree_block_d: int = 8
 
 
 @dataclasses.dataclass(frozen=True)

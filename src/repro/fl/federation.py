@@ -148,7 +148,11 @@ class Federation:
         else:
             base = boosting.ROUND_FNS[self.plan.algorithm]
             round_fn = jax.jit(
-                lambda s, X, y, m: base(self.learner, self.spec, s, X, y, m, use_pallas=up)
+                lambda s, X, y, m: base(
+                    self.learner, self.spec, s, X, y, m, use_pallas=up,
+                    batched_fit=opt.batched_fit,
+                    block_s=opt.tree_block_s, block_d=opt.tree_block_d,
+                )
             )
         committee_pred = self.plan.algorithm == "distboost_f"
         if opt.cache_predictions:

@@ -87,6 +87,10 @@ def sharded_adaboost_round(
     off for the pre-optimisation per-leaf behaviour (the
     ``+packed_broadcast`` ablation stage in bench_optimizations).
 
+    Step 2 reuses the shard-static fit cache (``state.fit_cache``, e.g.
+    the trees' ``BinnedDataset``): digitization/quantile work happens
+    once per shard at state init, never inside the round program.
+
     Step 3 is predict-once per shard: the [C, n] prediction matrix is
     materialised a single time, the local error vector is a kernel-backed
     ``weighted_errors`` reduction over it (then ``psum`` across the
@@ -94,8 +98,9 @@ def sharded_adaboost_round(
     row slice of the same matrix — never a second predict.
     """
     axes = fl_axes(mesh)
+    has_cache = state.fit_cache is not None and learner.fit_cached is not None
 
-    def body(ens_params, ens_alpha, ens_count, w, key, Xl, yl, ml):
+    def body(ens_params, ens_alpha, ens_count, w, key, Xl, yl, ml, *cache_l):
         # local block: [1, n, d] — this device group IS collaborator i
         Xi, yi, wi, mi = Xl[0], yl[0], w[0], ml[0]
         idx = jnp.zeros((), jnp.int32)
@@ -105,7 +110,11 @@ def sharded_adaboost_round(
 
         # paper step 2: local training + hypothesis-space broadcast
         w_fit = wi / jnp.maximum(jnp.sum(wi), 1e-30) * jnp.maximum(jnp.sum(mi), 1.0)
-        h_local = learner.fit(spec, None, Xi, yi, w_fit, kfit)
+        if has_cache:  # shard-static precomputation (binning etc.)
+            cache_i = jax.tree.map(lambda x: x[0], cache_l[0])
+            h_local = learner.fit_cached(spec, None, Xi, yi, w_fit, kfit, cache_i)
+        else:
+            h_local = learner.fit(spec, None, Xi, yi, w_fit, kfit)
         if packed_broadcast:  # one collective for the whole hypothesis
             buf, fmt = _pack_leaves(h_local)
             gathered = _multi_gather(buf, axes)  # [C, total]
@@ -141,16 +150,18 @@ def sharded_adaboost_round(
         return ens_params, ens_alpha, ens_count, wi[None], metrics
 
     coll = P(axes) if axes else P()
+    cache_args = (state.fit_cache,) if has_cache else ()
     fn = compat.shard_map(
         body,
         mesh=mesh,
-        in_specs=(P(), P(), P(), coll, P(), coll, coll, coll),
+        in_specs=(P(), P(), P(), coll, P(), coll, coll, coll) + (coll,) * len(cache_args),
         out_specs=(P(), P(), P(), coll, P()),
         check_vma=False,
     )
     ens = state.ensemble
     ens_params, ens_alpha, ens_count, w, metrics = fn(
-        ens.params, ens.alpha, ens.count, state.weights, state.key, X, y, mask
+        ens.params, ens.alpha, ens.count, state.weights, state.key, X, y, mask,
+        *cache_args,
     )
     key = jax.random.fold_in(state.key, 1)
     return (

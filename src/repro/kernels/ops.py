@@ -23,11 +23,17 @@ def _interpret() -> bool:
 
 
 def tree_hist(bin_idx, leaf, wy, *, n_leaves, n_bins_p1, use_pallas=False, **kw):
+    """Weighted class histogram; accepts [n, d] inputs or a leading
+    hypothesis/collaborator batch axis ([H, n, d] — one kernel launch
+    for all H fits).  This is the fit-path hot-spot dispatch: the fused
+    round routes it under ``OptimizationFlags.use_pallas``."""
     if use_pallas:
         return _tree_hist(
             bin_idx, leaf, wy, n_leaves=n_leaves, n_bins_p1=n_bins_p1,
             interpret=_interpret(), **kw,
         )
+    if bin_idx.ndim == 3:
+        return ref.tree_hist_batched_ref(bin_idx, leaf, wy, n_leaves, n_bins_p1)
     return ref.tree_hist_ref(bin_idx, leaf, wy, n_leaves, n_bins_p1)
 
 

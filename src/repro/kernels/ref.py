@@ -28,6 +28,22 @@ def tree_hist_ref(
     return flat.reshape(n_leaves, d, n_bins_p1, k)
 
 
+def tree_hist_batched_ref(
+    bin_idx: jax.Array,  # [H, n, d] i32 in [0, n_bins]
+    leaf: jax.Array,  # [H, n] i32 in [0, n_leaves)
+    wy: jax.Array,  # [H, n, K] f32 weighted one-hot labels
+    n_leaves: int,
+    n_bins_p1: int,
+) -> jax.Array:
+    """[H, L, d, B+1, K] — the batched ``tree_hist`` oracle: exactly the
+    per-slice oracle vmapped over the leading hypothesis/collaborator
+    axis, so the batched fit path stays bit-for-bit with C independent
+    single fits."""
+    return jax.vmap(
+        lambda b, l, w: tree_hist_ref(b, l, w, n_leaves, n_bins_p1)
+    )(bin_idx, leaf, wy)
+
+
 def weighted_errors_ref(
     preds: jax.Array,  # [H, n] i32 — every hypothesis's prediction
     y: jax.Array,  # [n] i32

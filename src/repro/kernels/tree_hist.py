@@ -9,8 +9,15 @@ the scatter into a **one-hot matmul** that runs on the MXU:
         C[f] += onehot(leaf * (B+1) + bin[:, f]).T  @  wy      # [M, S] @ [S, K]
 
 with M = n_leaves * (B+1) combined (leaf, bin) buckets.  The grid walks
-(feature blocks) x (sample blocks); the sample axis is innermost so each
-output tile stays resident in VMEM while samples stream through.
+(batch) x (feature blocks) x (sample blocks); the sample axis is
+innermost so each output tile stays resident in VMEM while samples
+stream through.
+
+The leading batch axis folds the federation's C collaborators (one local
+tree fit each, same tree level) into the SAME grid, so one fused
+AdaBoost.F round issues ONE kernel launch per tree level instead of C —
+see ``learners/tree.py::fit_tree_batched``.  2-D inputs (a single fit)
+are the batch=1 special case.
 """
 from __future__ import annotations
 
@@ -22,15 +29,15 @@ from jax.experimental import pallas as pl
 
 
 def _kernel(bin_ref, leaf_ref, wy_ref, out_ref, *, n_leaves: int, n_bins_p1: int):
-    si = pl.program_id(1)
+    si = pl.program_id(2)
 
     @pl.when(si == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    bins = bin_ref[...]  # [S, dblk] i32
-    leaf = leaf_ref[...]  # [S] i32
-    wy = wy_ref[...].astype(jnp.float32)  # [S, K]
+    bins = bin_ref[0]  # [S, dblk] i32
+    leaf = leaf_ref[0]  # [S] i32
+    wy = wy_ref[0].astype(jnp.float32)  # [S, K]
 
     M = n_leaves * n_bins_p1
     idx = leaf[:, None] * n_bins_p1 + bins  # [S, dblk]
@@ -40,16 +47,16 @@ def _kernel(bin_ref, leaf_ref, wy_ref, out_ref, *, n_leaves: int, n_bins_p1: int
     contrib = jnp.einsum(
         "sdm,sk->dmk", onehot, wy, preferred_element_type=jnp.float32
     )
-    out_ref[...] += contrib
+    out_ref[0] += contrib
 
 
 @functools.partial(
     jax.jit, static_argnames=("n_leaves", "n_bins_p1", "block_s", "block_d", "interpret")
 )
 def tree_hist(
-    bin_idx: jax.Array,  # [n, d] i32 in [0, n_bins]
-    leaf: jax.Array,  # [n] i32
-    wy: jax.Array,  # [n, K] f32
+    bin_idx: jax.Array,  # [n, d] or [H, n, d] i32 in [0, n_bins]
+    leaf: jax.Array,  # [n] or [H, n] i32
+    wy: jax.Array,  # [n, K] or [H, n, K] f32
     *,
     n_leaves: int,
     n_bins_p1: int,
@@ -57,9 +64,14 @@ def tree_hist(
     block_d: int = 8,
     interpret: bool = False,
 ) -> jax.Array:
-    """Returns C[L, d, B+1, K]; oracle: kernels/ref.py::tree_hist_ref."""
-    n, d = bin_idx.shape
-    K = wy.shape[1]
+    """Returns C[L, d, B+1, K] (or [H, L, d, B+1, K] with a leading
+    hypothesis/collaborator batch axis); oracle: kernels/ref.py.
+    """
+    squeeze = bin_idx.ndim == 2
+    if squeeze:
+        bin_idx, leaf, wy = bin_idx[None], leaf[None], wy[None]
+    H, n, d = bin_idx.shape
+    K = wy.shape[2]
     block_s = min(block_s, n)
     block_d = min(block_d, d)
 
@@ -68,22 +80,23 @@ def tree_hist(
     ns = -(-n // block_s)
     nd = -(-d // block_d)
     n_pad, d_pad = ns * block_s, nd * block_d
-    bin_idx = jnp.pad(bin_idx, ((0, n_pad - n), (0, d_pad - d)))
-    leaf = jnp.pad(leaf, (0, n_pad - n))
-    wy = jnp.pad(wy, ((0, n_pad - n), (0, 0)))
+    bin_idx = jnp.pad(bin_idx, ((0, 0), (0, n_pad - n), (0, d_pad - d)))
+    leaf = jnp.pad(leaf, ((0, 0), (0, n_pad - n)))
+    wy = jnp.pad(wy, ((0, 0), (0, n_pad - n), (0, 0)))
 
     M = n_leaves * n_bins_p1
     out = pl.pallas_call(
         functools.partial(_kernel, n_leaves=n_leaves, n_bins_p1=n_bins_p1),
-        grid=(nd, ns),
+        grid=(H, nd, ns),
         in_specs=[
-            pl.BlockSpec((block_s, block_d), lambda di, si: (si, di)),
-            pl.BlockSpec((block_s,), lambda di, si: (si,)),
-            pl.BlockSpec((block_s, K), lambda di, si: (si, 0)),
+            pl.BlockSpec((1, block_s, block_d), lambda h, di, si: (h, si, di)),
+            pl.BlockSpec((1, block_s), lambda h, di, si: (h, si)),
+            pl.BlockSpec((1, block_s, K), lambda h, di, si: (h, si, 0)),
         ],
-        out_specs=pl.BlockSpec((block_d, M, K), lambda di, si: (di, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((d_pad, M, K), jnp.float32),
+        out_specs=pl.BlockSpec((1, block_d, M, K), lambda h, di, si: (h, di, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, d_pad, M, K), jnp.float32),
         interpret=interpret,
     )(bin_idx, leaf, wy)
-    # [d, L*(B+1), K] -> [L, d, B+1, K]
-    return out[:d].reshape(d, n_leaves, n_bins_p1, K).transpose(1, 0, 2, 3)
+    # [H, d, L*(B+1), K] -> [H, L, d, B+1, K]
+    out = out[:, :d].reshape(H, d, n_leaves, n_bins_p1, K).transpose(0, 2, 1, 3, 4)
+    return out[0] if squeeze else out

@@ -108,7 +108,9 @@ def _run_sharded(args, lspec, Xs, ys, masks, Xte, yte, key):
     )
     mesh = jax.make_mesh((C, n_dev // C), ("data", "model"))
     learner = get_learner(lspec.name)
-    state = boosting.init_boost_state(learner, lspec, args.rounds, masks, key)
+    # X=Xs: shard-static fit precomputation (BinnedDataset for trees) is
+    # built once here and consumed inside the shard_map round.
+    state = boosting.init_boost_state(learner, lspec, args.rounds, masks, key, X=Xs)
     with compat.set_mesh(mesh):
         rfn = jax.jit(
             lambda s, X, y, m: sharded_adaboost_round(

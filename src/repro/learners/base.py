@@ -54,13 +54,35 @@ class WeakLearner:
     # Optional gradient-based warm-start fit (continues from ``params``) —
     # required by the FedAvg/DNN workflow, meaningless for closed-form fits.
     warm_fit: Callable[..., Params] | None = None
-    # Optional X-only fit precomputation, cacheable across boosting rounds
-    # (X is static per collaborator; only the weights change round to
-    # round).  ``precompute(spec, X) -> cache`` and
-    # ``fit_cached(spec, params, X, y, w, key, cache) -> params`` must
-    # satisfy  fit_cached(..., precompute(spec, X)) == fit(...).
+    # -- fit-cache contract -------------------------------------------------
+    # X is static per collaborator across boosting rounds; only the sample
+    # weights change.  A learner may therefore expose an X-only fit
+    # precomputation, computed ONCE per shard and threaded through every
+    # round as ``BoostState.fit_cache``:
+    #
+    #   ``precompute(spec, X) -> cache`` returns an ARBITRARY cache pytree
+    #   (arrays / NamedTuples / dicts — anything jax.tree handles).  The
+    #   trees return a ``learners/binning.py::BinnedDataset`` (quantile
+    #   edges + digitized bin indices); other learners can cache whatever
+    #   X-derived scaffold their fit reuses (Gram matrices, norms, ...).
+    #   The cache must vmap over a leading collaborator axis and cross
+    #   shard_map boundaries, i.e. contain only fixed-shape arrays.
+    #
+    #   ``fit_cached(spec, params, X, y, w, key, cache) -> params`` must
+    #   satisfy  fit_cached(..., precompute(spec, X)) == fit(...)
+    #   bit-for-bit — the cache is an optimisation, never a semantic knob.
     precompute: Callable[[LearnerSpec, jax.Array], Any] | None = None
     fit_cached: Callable[..., Params] | None = None
+    # Optional collaborator-batched fit: one tensor program fits all C
+    # local hypotheses of a federated round (kernel-backed learners fold
+    # the batch axis into their grid — one launch instead of C).
+    #
+    #   ``fit_batched(spec, X, y, w, keys, cache, *, use_pallas=...,
+    #   block_s=..., block_d=...) -> params`` over [C, ...]-stacked
+    #   inputs must equal ``vmap(fit)`` / ``vmap(fit_cached)`` bit-for-bit
+    #   when ``use_pallas=False`` (the kernel path agrees to float32
+    #   tolerance and is parity-swept in tests/test_kernels.py).
+    fit_batched: Callable[..., Params] | None = None
 
     def predict(self, spec: LearnerSpec, params: Params, X: jax.Array) -> jax.Array:
         return jnp.argmax(self.predict_logits(spec, params, X), axis=-1).astype(jnp.int32)

@@ -1,0 +1,70 @@
+"""Quantile binning — the data layer of the kernel-backed tree-fitting
+pipeline.
+
+A collaborator's shard ``X`` is static across every boosting round; only
+the sample weights change.  Everything about ``X`` that tree fitting
+needs — the per-feature quantile candidate thresholds AND the bin index
+of every (sample, feature) cell — can therefore be computed ONCE per
+shard and threaded through the rounds as a fit cache
+(``BoostState.fit_cache``).  Before this layer existed the fused round
+re-ran ``digitize`` (an ``[n, d, B]`` comparison sweep) on the same
+static data every round.
+
+``BinnedDataset`` is a pytree (NamedTuple of arrays), so it vmaps over
+collaborators, crosses ``shard_map`` boundaries in ``fl/sharded.py``,
+and lives inside jitted round programs unchanged.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class BinnedDataset(NamedTuple):
+    """Per-shard fit precomputation for histogram-based tree learners.
+
+    edges:   [d, n_bins] f32 — per-feature quantile candidate thresholds
+             (split at bin b tests ``x > edges[f, b]``).
+    bin_idx: [n, d] i32 in [0, n_bins] — number of edges each cell
+             exceeds; the direct input of the ``tree_hist`` kernel.
+    """
+
+    edges: jax.Array
+    bin_idx: jax.Array
+
+    @property
+    def n_bins(self) -> int:
+        return self.edges.shape[-1]
+
+
+def quantile_edges(X: jax.Array, n_bins: int) -> jax.Array:
+    """Per-feature candidate thresholds from quantiles. [d, n_bins]."""
+    qs = jnp.linspace(0.0, 1.0, n_bins + 2)[1:-1]
+    return jnp.quantile(X, qs, axis=0).T  # [d, n_bins]
+
+
+def digitize(X: jax.Array, edges: jax.Array) -> jax.Array:
+    """bin index of each sample/feature: #edges that x exceeds. [n, d] i32."""
+    return jnp.sum(X[:, :, None] > edges[None, :, :], axis=-1).astype(jnp.int32)
+
+
+def bin_dataset(X: jax.Array, n_bins: int) -> BinnedDataset:
+    """One-shot shard precomputation: quantile edges + digitized bins."""
+    edges = quantile_edges(X, n_bins)
+    return BinnedDataset(edges=edges, bin_idx=digitize(X, edges))
+
+
+def as_binned(cache, X: jax.Array, n_bins: int) -> BinnedDataset:
+    """Coerce any accepted fit-cache form into a ``BinnedDataset``.
+
+    Accepts the full ``BinnedDataset`` (nothing to do), a bare ``[d, B]``
+    edges array (the pre-binning cache format — digitize now), or
+    ``None`` (no cache — compute everything from ``X``).
+    """
+    if cache is None:
+        return bin_dataset(X, n_bins)
+    if isinstance(cache, BinnedDataset):
+        return cache
+    return BinnedDataset(edges=cache, bin_idx=digitize(X, cache))

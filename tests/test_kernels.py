@@ -28,6 +28,73 @@ def test_tree_hist_sweep(n, d, L, B1, K):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
 
 
+@pytest.mark.parametrize("C,n,d,L,B1,K", [
+    (3, 257, 5, 2, 9, 2),    # ragged n/d (padding paths) under the batch axis
+    (5, 130, 7, 8, 17, 3),   # n smaller than block_s, d ragged vs block_d
+])
+def test_tree_hist_batched_sweep(C, n, d, L, B1, K):
+    """The leading hypothesis/collaborator axis folds into the kernel
+    grid: one launch must equal the per-slice oracle stack."""
+    key = jax.random.PRNGKey(5)
+    k1, k2, k3 = jax.random.split(key, 3)
+    bin_idx = jax.random.randint(k1, (C, n, d), 0, B1)
+    leaf = jax.random.randint(k2, (C, n), 0, L)
+    wy = jax.random.uniform(k3, (C, n, K))
+    got = tree_hist(bin_idx, leaf, wy, n_leaves=L, n_bins_p1=B1,
+                    block_s=64, block_d=4, interpret=True)
+    want = ref.tree_hist_batched_ref(bin_idx, leaf, wy, L, B1)
+    assert got.shape == (C, L, d, B1, K)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+    # batched oracle == stack of single-slice oracles (bit-for-bit: the
+    # batched fit path must not change what one collaborator computes)
+    per_slice = np.stack([
+        np.asarray(ref.tree_hist_ref(bin_idx[c], leaf[c], wy[c], L, B1))
+        for c in range(C)
+    ])
+    np.testing.assert_array_equal(np.asarray(want), per_slice)
+
+
+def test_tree_hist_zero_weight_rows_are_noops():
+    """Masked/padded samples carry w == 0 and must not contribute —
+    including the rows the kernel itself pads up to a block multiple."""
+    key = jax.random.PRNGKey(6)
+    n, d, L, B1, K = 200, 6, 4, 9, 3
+    k1, k2, k3 = jax.random.split(key, 3)
+    bin_idx = jax.random.randint(k1, (n, d), 0, B1)
+    leaf = jax.random.randint(k2, (n,), 0, L)
+    wy = jax.random.uniform(k3, (n, K))
+    keep = (jnp.arange(n) < n - 37).astype(jnp.float32)  # zero-weight tail
+    wy_masked = wy * keep[:, None]
+    got = tree_hist(bin_idx, leaf, wy_masked, n_leaves=L, n_bins_p1=B1,
+                    block_s=64, block_d=4, interpret=True)
+    # dropping the zero-weight rows entirely must give the same histogram
+    m = n - 37
+    want = ref.tree_hist_ref(bin_idx[:m], leaf[:m], wy[:m], L, B1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+    # all-zero weights -> identically zero histogram
+    zero = tree_hist(bin_idx, leaf, jnp.zeros_like(wy), n_leaves=L, n_bins_p1=B1,
+                     block_s=64, block_d=4, interpret=True)
+    assert float(jnp.max(jnp.abs(zero))) == 0.0
+
+
+def test_tree_hist_batched_kernel_matches_singles():
+    """Kernel with the batch axis == the same kernel run slice by slice."""
+    key = jax.random.PRNGKey(7)
+    C, n, d, L, B1, K = 4, 96, 5, 2, 5, 2
+    k1, k2, k3 = jax.random.split(key, 3)
+    bin_idx = jax.random.randint(k1, (C, n, d), 0, B1)
+    leaf = jax.random.randint(k2, (C, n), 0, L)
+    wy = jax.random.uniform(k3, (C, n, K))
+    batched = tree_hist(bin_idx, leaf, wy, n_leaves=L, n_bins_p1=B1,
+                        block_s=32, block_d=4, interpret=True)
+    for c in range(C):
+        single = tree_hist(bin_idx[c], leaf[c], wy[c], n_leaves=L, n_bins_p1=B1,
+                           block_s=32, block_d=4, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(batched[c]), np.asarray(single), atol=1e-5
+        )
+
+
 @pytest.mark.parametrize("H,n", [(3, 100), (8, 1000), (33, 4096)])
 def test_weighted_errors_sweep(H, n):
     key = jax.random.PRNGKey(1)

@@ -31,8 +31,11 @@ SCRIPT = textwrap.dedent(
     lspec = LearnerSpec("decision_tree", spec_d.n_features, spec_d.n_classes, {"depth": 4})
     learner = get_learner("decision_tree")
     T = 6
+    # X=Xs: both paths carry the shard-static BinnedDataset fit cache —
+    # the SPMD round consumes it through the shard_map boundary.
     with compat.set_mesh(mesh):
-        state = boosting.init_boost_state(learner, lspec, T, masks, jax.random.PRNGKey(2))
+        state = boosting.init_boost_state(learner, lspec, T, masks, jax.random.PRNGKey(2), X=Xs)
+        assert state.fit_cache is not None
         rfn = jax.jit(lambda s, X, y, m: sharded_adaboost_round(learner, lspec, mesh, s, X, y, m))
         for _ in range(T):
             state, metrics = rfn(state, Xs, ys, masks)
@@ -40,7 +43,7 @@ SCRIPT = textwrap.dedent(
         pred = sharded_strong_predict(learner, lspec, mesh, state.ensemble, Xte[:n])
     f1_sharded = float(f1_macro(yte[:n], pred, lspec.n_classes))
 
-    state2 = boosting.init_boost_state(learner, lspec, T, masks, jax.random.PRNGKey(2))
+    state2 = boosting.init_boost_state(learner, lspec, T, masks, jax.random.PRNGKey(2), X=Xs)
     host_fn = jax.jit(lambda s, X, y, m: boosting.adaboost_f_round(learner, lspec, s, X, y, m))
     for _ in range(T):
         state2, _ = host_fn(state2, Xs, ys, masks)
