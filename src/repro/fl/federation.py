@@ -10,7 +10,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -87,6 +88,7 @@ class Federation:
         self._fused_round_fn = None
         self._wire_fmt = None
         self._score_fn = None  # jitted predict-once shard scorer (lazy)
+        self.published: List[Path] = []  # checkpoint artifacts, oldest first
 
     # -- communication accounting -----------------------------------------
     def send(self, tree: Any) -> List[bytes]:
@@ -102,17 +104,73 @@ class Federation:
             time.sleep(self.end_round_sleep_s)
 
     # -- main loop ---------------------------------------------------------
-    def run(self, rounds: Optional[int] = None, eval_every: int = 1) -> List[Dict[str, float]]:
+    def run(
+        self,
+        rounds: Optional[int] = None,
+        eval_every: int = 1,
+        *,
+        publish_every: Optional[int] = None,
+        publish_dir: Optional[str] = None,
+        on_checkpoint: Optional[Callable[[Path, int], None]] = None,
+    ) -> List[Dict[str, float]]:
+        """Run the federation; optionally publish serving checkpoints.
+
+        ``publish_every=k`` emits a versioned serving artifact
+        (``serve/artifact.publish_artifact``) into ``publish_dir`` every
+        k rounds and after the final round — the continuous-training →
+        continuous-serving handoff: capacity is fixed at ``rounds``, so
+        successive checkpoints grow append-only and a ``ServeEngine`` /
+        ``ShardVoteCache`` consumer folds only the appended members.
+        ``on_checkpoint(path, round)`` fires after each publish (e.g. to
+        hot-swap a live engine).  Publishing rides the fused path, which
+        owns the fused ``BoostState``; the interpreted/FedAvg paths keep
+        their list-of-pairs ensemble and do not publish.
+        """
         rounds = rounds or self.plan.aggregator.rounds
+        if publish_every is not None:
+            if publish_every <= 0:
+                raise ValueError(f"publish_every must be positive, got {publish_every}")
+            if publish_dir is None:
+                raise ValueError("publish_every requires a publish_dir")
+            if not (self.plan.optimizations.fused_round and self.plan.algorithm != "fedavg"):
+                raise ValueError(
+                    "checkpoint publishing requires the fused round path "
+                    "(optimizations.fused_round on, non-fedavg algorithm)"
+                )
         if self.plan.optimizations.fused_round and self.plan.algorithm != "fedavg":
-            return self._run_fused(rounds, eval_every)
+            return self._run_fused(
+                rounds, eval_every,
+                publish_every=publish_every, publish_dir=publish_dir,
+                on_checkpoint=on_checkpoint,
+            )
         self._eval_every = eval_every
         for r in range(rounds):
             protocol.run_round(self, r)
         return self.history
 
+    def _publish_checkpoint(self, state: boosting.BoostState, round_idx: int,
+                            publish_dir: str, on_checkpoint) -> None:
+        """One rolling-artifact checkpoint (version = 1-based round)."""
+        from repro.serve.artifact import publish_artifact  # serve is optional at train time
+
+        committee = (
+            self.n_collaborators if self.plan.algorithm == "distboost_f" else None
+        )
+        path = publish_artifact(
+            publish_dir, self.spec, state.ensemble,
+            version=round_idx + 1, committee_size=committee,
+            extra={"round": round_idx + 1, "algorithm": self.plan.algorithm},
+        )
+        self.published.append(path)
+        if on_checkpoint is not None:
+            on_checkpoint(path, round_idx + 1)
+
     # -- fused fast path: the whole round as one jitted program ------------
-    def _run_fused(self, rounds: int, eval_every: int) -> List[Dict[str, float]]:
+    def _run_fused(
+        self, rounds: int, eval_every: int,
+        *, publish_every: Optional[int] = None, publish_dir: Optional[str] = None,
+        on_checkpoint=None,
+    ) -> List[Dict[str, float]]:
         Xs = jnp.stack([c.X for c in self.collaborators])
         ys = jnp.stack([c.y for c in self.collaborators])
         masks = jnp.stack([c.mask for c in self.collaborators])
@@ -183,6 +241,11 @@ class Federation:
                 self.history.append(
                     {"round": r, "f1": float(f1), **{k: float(v) for k, v in metrics.items()}}
                 )
+            if publish_every and ((r + 1) % publish_every == 0 or r == rounds - 1):
+                # the fused state owns the slot-buffer ensemble: each
+                # checkpoint is the same capacity with a larger count, so
+                # the artifact stream is append-only by construction
+                self._publish_checkpoint(state, r, publish_dir, on_checkpoint)
         self._fused_state = state
         return self.history
 

@@ -22,6 +22,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro import compat
 from repro.core import scoring
 from repro.core.boosting import BoostState, Ensemble, _samme_alpha, _set_slot, _take_slot
+from repro.kernels import ops
 from repro.learners.base import LearnerSpec, WeakLearner
 
 
@@ -182,26 +183,52 @@ def _multi_psum(x, axes):
     return x
 
 
-def sharded_strong_predict(
-    learner: WeakLearner, spec: LearnerSpec, mesh: Mesh, ens: Ensemble, X: jax.Array
-) -> jax.Array:
-    """Ensemble inference, batch-sharded over the federation axes."""
+def make_batch_predict(
+    learner: WeakLearner,
+    spec: LearnerSpec,
+    mesh: Mesh,
+    *,
+    committee: bool = False,
+    use_pallas: bool = False,
+):
+    """Batch-sharded jitted ensemble predict — the serving engine's
+    mesh backend (``serve/engine.EngineConfig(mesh=...)``).
+
+    Returns ``fn(params, alpha, count, X) -> [n] i32`` where the batch
+    axis of ``X`` is split over the mesh's federation axes (params and
+    alpha replicate): every shard scores its slice of the batch with the
+    SAME member-vote + ``vote_argmax`` program the local engine runs, so
+    sharded answers are bit-for-bit the local answers.  ``n`` must
+    divide by the federation shard count — the engine guarantees this by
+    admission (static batches padded to a ``batch_size`` validated
+    against the mesh)."""
     axes = fl_axes(mesh)
 
     def body(params, alpha, count, Xl):
         T = alpha.shape[0]
-        votes = jnp.zeros((Xl.shape[0], spec.n_classes), jnp.float32)
-
-        def add_vote(t, votes):
-            pred = learner.predict(spec, _take_slot(params, t), Xl)
-            used = jnp.where(t < count, alpha[t], 0.0)
-            return votes + used * jax.nn.one_hot(pred, spec.n_classes)
-
-        votes = jax.lax.fori_loop(0, T, add_vote, votes)
-        return jnp.argmax(votes, axis=-1).astype(jnp.int32)
+        member = lambda t: scoring.member_prediction(
+            learner, spec, _take_slot(params, t), Xl, committee=committee
+        )
+        preds = jax.vmap(member)(jnp.arange(T))  # [T, n/shards]
+        used = (jnp.arange(T) < count).astype(jnp.float32) * alpha
+        return ops.vote_argmax(
+            preds, used, n_classes=spec.n_classes, use_pallas=use_pallas
+        )
 
     coll = P(axes) if axes else P()
     fn = compat.shard_map(
         body, mesh=mesh, in_specs=(P(), P(), P(), coll), out_specs=coll, check_vma=False
+    )
+    return jax.jit(fn)
+
+
+def sharded_strong_predict(
+    learner: WeakLearner, spec: LearnerSpec, mesh: Mesh, ens: Ensemble, X: jax.Array,
+    *, committee: bool = False, use_pallas: bool = False,
+) -> jax.Array:
+    """Ensemble inference, batch-sharded over the federation axes (the
+    one-shot convenience over :func:`make_batch_predict`)."""
+    fn = make_batch_predict(
+        learner, spec, mesh, committee=committee, use_pallas=use_pallas
     )
     return fn(ens.params, ens.alpha, ens.count, X)

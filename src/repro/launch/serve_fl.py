@@ -1,4 +1,5 @@
-"""Ensemble serving driver — train-then-serve or load-artifact-then-serve.
+"""Ensemble serving driver — train-then-serve, load-then-serve, or the
+continuous train→publish→serve loop.
 
   # train a federation, save the artifact, then serve the test split:
   PYTHONPATH=src python -m repro.launch.serve_fl --dataset pendigits \
@@ -8,10 +9,19 @@
   PYTHONPATH=src python -m repro.launch.serve_fl --dataset pendigits \
       --artifact /tmp/pendigits.mafl --load
 
+  # continuous loop: the federation publishes a rolling artifact every
+  # k rounds and the serving consumer folds each checkpoint in
+  # incrementally (append-only growth — O(new members) per checkpoint):
+  PYTHONPATH=src python -m repro.launch.serve_fl --dataset pendigits \
+      --learner decision_tree --rounds 10 --publish-every 2 \
+      --publish-dir /tmp/pendigits_pub
+
 Serving drives the micro-batching engine over the test split (ragged
-tail included), reports req/s and p50/p99 latency, then replays the
-same traffic against the shard-resident vote cache to show the
-cache-hit path.
+tail included) under the chosen dispatch policy — ``--policy sync``
+(submit/flush) or ``--policy deadline`` (async dispatch loop: a partial
+batch runs by itself after ``--t-max-ms``, no flush) — reports req/s
+and p50/p99 latency, then replays the same traffic against the
+shard-resident vote cache to show the cache-hit path.
 """
 from __future__ import annotations
 
@@ -52,6 +62,29 @@ def train_ensemble(args, lspec, learner, Xtr, ytr, key):
     return state.ensemble
 
 
+def _drive_engine(args, engine, Xte):
+    """Push the ragged request stream through the configured policy;
+    returns (predictions in submit order, wall seconds)."""
+    step = args.request_rows
+    if args.policy == "deadline":
+        with engine.scheduler(t_max_s=args.t_max_ms / 1e3) as sched:
+            t0 = time.perf_counter()
+            ids = []
+            for i in range(0, Xte.shape[0], step):
+                ids.extend(sched.submit(np.asarray(Xte[i : i + step])))
+            # NO flush: the tail dispatches on its own at the deadline
+            pred = sched.results(ids, timeout_s=60.0)
+            dt = time.perf_counter() - t0
+        return pred, dt
+    t0 = time.perf_counter()
+    ids = []
+    for i in range(0, Xte.shape[0], step):
+        ids.extend(engine.submit(np.asarray(Xte[i : i + step])))
+    engine.flush()
+    dt = time.perf_counter() - t0
+    return np.array([engine.take(i) for i in ids]), dt
+
+
 def serve(args, learner, lspec, ensemble, Xte, yte, *, committee=False):
     engine = ServeEngine(
         learner, lspec, ensemble,
@@ -59,17 +92,12 @@ def serve(args, learner, lspec, ensemble, Xte, yte, *, committee=False):
     )
     engine.warmup()  # compile cache warm before traffic arrives
 
-    t0 = time.perf_counter()
-    ids = []
-    for i in range(0, Xte.shape[0], args.request_rows):  # ragged request stream
-        ids.extend(engine.submit(np.asarray(Xte[i : i + args.request_rows])))
-    engine.flush()
-    dt = time.perf_counter() - t0
-    pred = np.array([engine.take(i) for i in ids])
+    pred, dt = _drive_engine(args, engine, Xte)
+    n = Xte.shape[0]
     f1 = float(f1_macro(yte, pred, lspec.n_classes))
     lat = engine.stats.request_latencies
     print(
-        f"engine: {len(ids)} requests in {dt:.3f}s = {len(ids)/dt:.0f} req/s  "
+        f"engine[{args.policy}]: {n} requests in {dt:.3f}s = {n/dt:.0f} req/s  "
         f"p50 {1e3*_percentile(lat, 50):.2f}ms p99 {1e3*_percentile(lat, 99):.2f}ms  "
         f"({engine.stats.batches} batches, {engine.stats.padded_rows} padded rows)  "
         f"F1 {f1:.4f}"
@@ -91,6 +119,76 @@ def serve(args, learner, lspec, ensemble, Xte, yte, *, committee=False):
     return f1
 
 
+def publish_and_consume(args, lspec, learner, Xtr, ytr, Xte, yte, key):
+    """The continuous loop: a fused federation publishes a rolling
+    artifact every ``--publish-every`` rounds, and the serving side
+    (engine + vote cache) folds each checkpoint in incrementally."""
+    import dataclasses
+
+    from repro.core.plan import adaboost_plan
+    from repro.fl.federation import Federation
+
+    Xs, ys, masks = iid_partition(Xtr, ytr, args.collaborators, key)
+    plan = adaboost_plan(rounds=args.rounds)
+    if args.use_pallas:  # honour the flag for TRAINING too, not just serving
+        plan = dataclasses.replace(
+            plan,
+            optimizations=dataclasses.replace(plan.optimizations, use_pallas=True),
+        )
+    fed = Federation(plan, Xs, ys, masks, Xte, yte, lspec, jax.random.fold_in(key, 1))
+
+    engine = cache = None
+    consumed = []  # (round, members, engine req/s) per checkpoint
+
+    def consume(path, round_idx):
+        nonlocal engine, cache
+        art = load_artifact(path)
+        if engine is None:  # first checkpoint: build the serving side
+            engine = ServeEngine(
+                art.learner, art.spec, art.ensemble,
+                batch_size=args.batch, committee=art.committee,
+                use_pallas=args.use_pallas,
+            )
+            engine.warmup()
+            cache = ShardVoteCache(
+                art.learner, art.spec, art.ensemble, committee=art.committee
+            )
+        else:  # rolling checkpoint: a pure append — no recompile, no rebuild
+            engine.update_ensemble(art.ensemble)
+            cache.update_ensemble(art.ensemble)
+        pred, dt = _drive_engine(args, engine, np.asarray(Xte))
+        cache_pred = cache.predict("test_split", Xte)
+        assert np.array_equal(cache_pred, pred), "cache diverged from engine"
+        members = int(art.manifest["ensemble_count"])
+        consumed.append((round_idx, members, Xte.shape[0] / dt))
+        print(f"  checkpoint round {round_idx}: {members} members served, "
+              f"{Xte.shape[0]/dt:.0f} req/s, cache {cache.stats()}")
+
+    t0 = time.time()
+    fed.run(
+        rounds=args.rounds, eval_every=max(args.rounds // 2, 1),
+        publish_every=args.publish_every, publish_dir=args.publish_dir,
+        on_checkpoint=consume,
+    )
+    print(f"train+publish+serve loop: {len(fed.published)} checkpoints "
+          f"in {time.time() - t0:.1f}s -> {args.publish_dir}")
+
+    # the consumer only ever folded appended members: total folds == the
+    # final member count (each member predicted exactly once per shard)
+    final = load_artifact(fed.published[-1])
+    assert cache.stats()["members_folded"] == int(final.manifest["ensemble_count"]), \
+        cache.stats()
+    assert engine.stats.compiles == 1, "checkpoint swaps must not recompile"
+    want = np.asarray(
+        boosting.strong_predict(final.learner, final.spec, final.ensemble, Xte)
+    )
+    got = cache.predict("test_split")
+    np.testing.assert_array_equal(got, want)
+    f1 = float(f1_macro(yte, got, lspec.n_classes))
+    print(f"final checkpoint F1 {f1:.4f} (bit-for-bit strong_predict)")
+    return f1
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="pendigits")
@@ -102,10 +200,21 @@ def main(argv=None):
                     help="artifact path: written after training, or read with --load")
     ap.add_argument("--load", action="store_true",
                     help="skip training; serve the --artifact file")
+    ap.add_argument("--publish-every", type=int, default=None,
+                    help="train a federation that publishes a rolling artifact "
+                         "every k rounds; serving consumes each checkpoint "
+                         "incrementally (requires --publish-dir)")
+    ap.add_argument("--publish-dir", default=None,
+                    help="directory for the rolling artifact stream")
     ap.add_argument("--batch", type=int, default=256,
                     help="static serving batch size")
     ap.add_argument("--request-rows", type=int, default=37,
                     help="rows per submitted request (ragged on purpose)")
+    ap.add_argument("--policy", choices=["sync", "deadline"], default="sync",
+                    help="dispatch policy: sync submit/flush, or the async "
+                         "deadline loop (partial batches run after --t-max-ms)")
+    ap.add_argument("--t-max-ms", type=float, default=2.0,
+                    help="deadline policy: max ms a partial batch may queue")
     ap.add_argument("--cache-repeats", type=int, default=10)
     ap.add_argument("--use-pallas", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
@@ -114,6 +223,17 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     k1, k2 = jax.random.split(key)
     dspec, (Xtr, ytr, Xte, yte) = get_dataset(args.dataset, k1)
+
+    hp = {"depth": args.depth, "n_bins": 16}
+    if args.learner == "mlp":
+        hp = {"hidden": 64, "steps": 200}
+
+    if args.publish_every is not None:
+        if not args.publish_dir:
+            ap.error("--publish-every requires --publish-dir")
+        lspec = LearnerSpec(args.learner, dspec.n_features, dspec.n_classes, hp)
+        learner = get_learner(args.learner)
+        return publish_and_consume(args, lspec, learner, Xtr, ytr, Xte, yte, k2)
 
     committee = False
     if args.load:
@@ -125,9 +245,6 @@ def main(argv=None):
         print(f"loaded {args.artifact}: {art.manifest['learner']} x "
               f"{art.manifest['ensemble_count']} members")
     else:
-        hp = {"depth": args.depth, "n_bins": 16}
-        if args.learner == "mlp":
-            hp = {"hidden": 64, "steps": 200}
         lspec = LearnerSpec(args.learner, dspec.n_features, dspec.n_classes, hp)
         learner = get_learner(args.learner)
         ensemble = train_ensemble(args, lspec, learner, Xtr, ytr, k2)

@@ -4,10 +4,16 @@ Takes a federation's trained strong hypothesis all the way to
 high-throughput batched inference, for *any* registered weak learner:
 
   * ``artifact``  — save/load a deployable single-file artifact
-    (versioned manifest + the packed wire format of core/serialization);
+    (versioned manifest + the packed wire format of core/serialization),
+    plus the rolling checkpoint stream (``publish_artifact`` /
+    ``latest_artifact``) a still-training federation hands to serving;
   * ``engine``    — fixed-shape micro-batching request scheduler with a
     warm per-batch-size compile cache and a Pallas ``vote_argmax``
-    reduction over member votes;
+    reduction over member votes; ``EngineConfig(mesh=...)`` swaps in
+    the batch-sharded predict of ``fl/sharded.make_batch_predict`` so
+    one engine spans a mesh;
+  * ``scheduler`` — the async deadline dispatch loop: a partial batch
+    runs on its own after ``t_max_s``, no ``flush()`` needed;
   * ``cache``     — shard-resident incremental vote cache built on
     ``core/scoring.VoteTally``: repeat traffic reuses per-member votes
     and a still-training ensemble updates serving state in
@@ -15,14 +21,27 @@ high-throughput batched inference, for *any* registered weak learner:
 
 Driver: ``launch/serve_fl.py``.  Benchmark: ``benchmarks/bench_serve.py``.
 """
-from repro.serve.artifact import LoadedArtifact, load_artifact, save_artifact
+from repro.serve.artifact import (
+    LoadedArtifact,
+    ensemble_signature,
+    latest_artifact,
+    load_artifact,
+    publish_artifact,
+    save_artifact,
+)
 from repro.serve.cache import ShardVoteCache
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import EngineConfig, ServeEngine
+from repro.serve.scheduler import DeadlineScheduler
 
 __all__ = [
+    "DeadlineScheduler",
+    "EngineConfig",
     "LoadedArtifact",
     "ServeEngine",
     "ShardVoteCache",
+    "ensemble_signature",
+    "latest_artifact",
     "load_artifact",
+    "publish_artifact",
     "save_artifact",
 ]

@@ -13,6 +13,12 @@ part: it names the learner (registry key), the learning problem
 used count, committee size), which is exactly enough to rebuild the
 pytree *structure* via ``learner.init`` + ``init_ensemble`` and pour the
 payload back into it — no pickle, no code in the artifact.
+
+A still-training federation publishes a ROLLING artifact stream with
+``publish_artifact``: each checkpoint is a fresh versioned file plus an
+atomically-replaced ``LATEST`` pointer, so a serving consumer polling
+``latest_artifact`` never reads a half-written file and (capacity being
+fixed across checkpoints) folds each new version in as a pure append.
 """
 from __future__ import annotations
 
@@ -44,6 +50,16 @@ class LoadedArtifact(NamedTuple):
         return self.committee_size is not None
 
 
+def ensemble_signature(ensemble: boosting.Ensemble) -> tuple:
+    """Full structural identity of an ensemble pytree: treedef plus every
+    leaf's (shape, dtype).  Two ensembles with equal signatures are
+    interchangeable under a compiled serving program — this is the check
+    both ``save_artifact`` (vs the manifest-derived template) and
+    ``ServeEngine.update_ensemble`` (vs the live ensemble) apply."""
+    leaves, treedef = jax.tree.flatten(ensemble)
+    return treedef, [(tuple(l.shape), str(l.dtype)) for l in leaves]
+
+
 def _ensemble_template(
     spec: LearnerSpec, T: int, committee_size: int | None
 ) -> boosting.Ensemble:
@@ -69,8 +85,7 @@ def save_artifact(
     """Write a single-file serving artifact; returns the path."""
     path = Path(path)
     template = _ensemble_template(spec, ensemble.alpha.shape[0], committee_size)
-    got = [(tuple(l.shape), str(l.dtype)) for l in jax.tree.leaves(ensemble)]
-    want = [(tuple(l.shape), str(l.dtype)) for l in jax.tree.leaves(template)]
+    got, want = ensemble_signature(ensemble), ensemble_signature(template)
     if got != want:
         raise ValueError(
             f"ensemble does not match the {spec.name!r} template: {got} != {want}"
@@ -102,15 +117,39 @@ def save_artifact(
     return path
 
 
+_MANIFEST_KEYS = (
+    "format_version", "learner", "n_features", "n_classes", "hparams",
+    "ensemble_capacity", "ensemble_count", "committee_size",
+    "payload_bytes", "payload_crc32",
+)
+
+
 def load_artifact(path: str | Path) -> LoadedArtifact:
     data = Path(path).read_bytes()
+    header = len(MAGIC) + 4  # magic + u32 manifest length
+    # validate lengths BEFORE unpacking: a file truncated inside the
+    # header must raise the documented ValueError, not a raw struct.error
+    if len(data) < header:
+        raise ValueError(
+            f"{path}: truncated header ({len(data)} < {header} bytes)"
+        )
     if data[: len(MAGIC)] != MAGIC:
         raise ValueError(f"{path}: not a MAFL serving artifact (bad magic)")
-    off = len(MAGIC)
-    (mlen,) = struct.unpack("<I", data[off : off + 4])
-    off += 4
-    manifest = json.loads(data[off : off + mlen].decode())
-    payload = data[off + mlen :]
+    (mlen,) = struct.unpack("<I", data[len(MAGIC) : header])
+    if len(data) < header + mlen:
+        raise ValueError(
+            f"{path}: truncated manifest ({len(data) - header} < {mlen} bytes)"
+        )
+    try:
+        manifest = json.loads(data[header : header + mlen].decode())
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise ValueError(f"{path}: corrupt manifest: {e}") from e
+    if not isinstance(manifest, dict):
+        raise ValueError(f"{path}: manifest is not a JSON object")
+    missing = [k for k in _MANIFEST_KEYS if k not in manifest]
+    if missing:
+        raise ValueError(f"{path}: manifest missing required keys {missing}")
+    payload = data[header + mlen :]
     if manifest["format_version"] > MANIFEST_VERSION:
         raise ValueError(
             f"{path}: artifact format v{manifest['format_version']} is newer "
@@ -140,3 +179,49 @@ def load_artifact(path: str | Path) -> LoadedArtifact:
         committee_size=manifest["committee_size"],
         manifest=manifest,
     )
+
+
+# ---------------------------------------------------------------------------
+# Rolling checkpoint stream — the federation→serving handoff
+# ---------------------------------------------------------------------------
+
+LATEST = "LATEST"
+
+
+def publish_artifact(
+    publish_dir: str | Path,
+    spec: LearnerSpec,
+    ensemble: boosting.Ensemble,
+    *,
+    version: int,
+    committee_size: int | None = None,
+    extra: dict | None = None,
+) -> Path:
+    """One checkpoint of a still-training federation: write a fresh
+    versioned artifact, then atomically repoint ``LATEST`` at it.
+
+    The version lands in the manifest (``publish_version``) and the file
+    name, so consumers can both poll :func:`latest_artifact` and replay
+    the full checkpoint history in order.  The pointer swap is an
+    ``os.replace`` — a concurrent reader sees the old complete artifact
+    or the new complete artifact, never a partial write."""
+    publish_dir = Path(publish_dir)
+    path = publish_dir / f"ensemble_v{version:06d}.mafl"
+    save_artifact(
+        path, spec, ensemble, committee_size=committee_size,
+        extra={"publish_version": int(version), **(extra or {})},
+    )
+    tmp = publish_dir / (LATEST + ".tmp")
+    tmp.write_text(path.name)
+    tmp.replace(publish_dir / LATEST)
+    return path
+
+
+def latest_artifact(publish_dir: str | Path) -> Path | None:
+    """Resolve the ``LATEST`` pointer; None when nothing is published."""
+    pointer = Path(publish_dir) / LATEST
+    if not pointer.exists():
+        return None
+    name = pointer.read_text().strip()
+    path = pointer.parent / name
+    return path if name and path.exists() else None

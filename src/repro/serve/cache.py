@@ -43,7 +43,11 @@ class _Resident:
 
 
 def _fingerprint(X) -> tuple:
-    arr = np.ascontiguousarray(np.asarray(X))
+    # Normalise to the float32 the cache actually serves (``register``
+    # stores f32) BEFORE hashing: a caller holding the same rows in
+    # float64 must fingerprint identically, otherwise every predict
+    # re-registers and silently turns cache hits into full-tally misses.
+    arr = np.ascontiguousarray(np.asarray(X, np.float32))
     return (arr.shape, zlib.crc32(arr.tobytes()))
 
 
@@ -68,6 +72,7 @@ class ShardVoteCache:
         self.partial_hits = 0  # requests that folded only new members
         self.misses = 0  # first-contact requests (full tally build)
         self.members_folded = 0  # total member-predict passes actually run
+        self.reregistrations = 0  # key reuse with different rows (tally rebuilt)
         learner_, spec_, committee_ = learner, spec, committee
 
         def _refresh(ens, tally, X):
@@ -100,6 +105,7 @@ class ShardVoteCache:
         elif X is not None and _fingerprint(X) != self._shards[key].fingerprint:
             # key reuse with different rows: the old tally answers the OLD
             # rows — re-register so the caller never gets stale predictions
+            self.reregistrations += 1
             self.register(key, X)
         shard = self._shards[key]
         new = self._count - shard.counted
@@ -144,4 +150,5 @@ class ShardVoteCache:
             "partial_hits": self.partial_hits,
             "misses": self.misses,
             "members_folded": self.members_folded,
+            "reregistrations": self.reregistrations,
         }

@@ -12,22 +12,35 @@ is uniform across the registry (``predict(spec, params, X) -> [n] i32``,
 with DistBoost.F committees folded by ``scoring.member_prediction``) —
 the serving-side payoff of model-agnosticism.
 
-Two entry points:
+Three entry points:
 
   * ``predict(X)``        — synchronous: chunk, pad, run, unpad;
-  * ``submit(X)/flush()`` — the micro-batching scheduler: rows queue
-    until a full batch packs (or ``flush`` pads the remainder), results
-    land in ``results`` keyed by the returned request ids.
+  * ``submit(X)/flush()`` — the inline micro-batching scheduler: rows
+    queue until a full batch packs (or ``flush`` pads the remainder),
+    results land in ``results`` keyed by the returned request ids;
+  * ``scheduler(...)``    — the async deadline dispatch loop
+    (``serve/scheduler.py``): a partial batch runs by itself once the
+    oldest queued request's deadline arrives, no ``flush`` needed.
+
+``EngineConfig`` selects the predict backend: local single-device by
+default, or — given a mesh — the batch-sharded jitted predict of
+``fl/sharded.make_batch_predict``, so ONE engine spans the federation
+mesh (each static batch is split over the federation axes; admission
+requires the batch size to divide evenly across shards).
 
 ``update_ensemble`` swaps in a grown ensemble without recompiling
-(slot-buffer shapes are static; only ``count`` moves).
+(slot-buffer shapes are static; only ``count`` moves).  The swap is
+validated against the live ensemble's full structural signature
+(treedef + every leaf's shape/dtype) — an artifact from a different
+learner or spec that merely matches ``alpha``'s capacity must not reach
+the warm compile cache.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import time
-from typing import Callable, Deque, Dict, List
+from typing import Any, Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,11 +49,32 @@ import numpy as np
 from repro.core import boosting, scoring
 from repro.kernels import ops
 from repro.learners.base import LearnerSpec, WeakLearner
+from repro.serve.artifact import ensemble_signature
 
 
 # Rolling reservoir size for latency samples: enough for stable p99 at
 # any traffic level while keeping a long-lived engine's memory bounded.
 STATS_WINDOW = 100_000
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Serving policy knobs, grouped so drivers can pass one object.
+
+    ``mesh`` selects the predict backend: ``None`` runs the local jitted
+    predict; a ``jax.sharding.Mesh`` routes every static batch through
+    ``fl/sharded.make_batch_predict`` — the batch axis is sharded over
+    the mesh's federation axes (``pod``/``data``), so one engine serves
+    from the whole mesh.  ``t_max_s`` is the deadline-scheduler default:
+    the longest a queued partial batch may wait before it is dispatched
+    padded (``serve/scheduler.DeadlineScheduler``).
+    """
+
+    batch_size: int = 256
+    committee: bool = False
+    use_pallas: bool = False
+    t_max_s: float = 0.005
+    mesh: Any = None  # jax.sharding.Mesh | None
 
 
 @dataclasses.dataclass
@@ -66,16 +100,45 @@ class ServeEngine:
         spec: LearnerSpec,
         ensemble: boosting.Ensemble,
         *,
-        batch_size: int = 256,
-        committee: bool = False,
-        use_pallas: bool = False,
+        batch_size: Optional[int] = None,
+        committee: Optional[bool] = None,
+        use_pallas: Optional[bool] = None,
+        config: Optional[EngineConfig] = None,
     ):
+        if config is None:
+            config = EngineConfig(
+                batch_size=256 if batch_size is None else int(batch_size),
+                committee=bool(committee) if committee is not None else False,
+                use_pallas=bool(use_pallas) if use_pallas is not None else False,
+            )
+        elif any(v is not None for v in (batch_size, committee, use_pallas)):
+            # silently preferring one source over the other would serve
+            # under knobs the caller never asked for
+            raise ValueError(
+                "pass batch_size/committee/use_pallas inside the EngineConfig, "
+                "not alongside it"
+            )
+        self.config = config
         self.learner = learner
         self.spec = spec
         self.ensemble = ensemble
-        self.batch_size = int(batch_size)
-        self.committee = committee
-        self.use_pallas = use_pallas
+        self.batch_size = int(config.batch_size)
+        self.committee = config.committee
+        self.use_pallas = config.use_pallas
+        if config.mesh is not None:
+            # multi-shard admission: every dispatched batch is the full
+            # static [B, d] (pack pads), and B must split evenly over
+            # the mesh's federation axes
+            from repro.fl.sharded import fl_axes
+
+            shards = 1
+            for a in fl_axes(config.mesh):
+                shards *= config.mesh.shape[a]
+            if self.batch_size % shards:
+                raise ValueError(
+                    f"batch_size {self.batch_size} does not divide over the "
+                    f"{shards} federation shards of the mesh"
+                )
         self.stats = EngineStats()
         self._fns: Dict[int, Callable] = {}  # warm compile cache: B -> jitted
         # (id, row, t_submit); deque so batch draining is O(B), not a slice-copy
@@ -90,20 +153,30 @@ class ServeEngine:
         if B not in self._fns:
             learner, spec, committee = self.learner, self.spec, self.committee
             use_pallas = self.use_pallas
+            if self.config.mesh is not None:
+                # batch-sharded backend: the same member-vote/argmax
+                # program, shard_map'd over the mesh's federation axes
+                from repro.fl.sharded import make_batch_predict
 
-            def batch_predict(params, alpha, count, Xb):
-                T = alpha.shape[0]
-                member = lambda t: scoring.member_prediction(
-                    learner, spec, scoring._take_slot(params, t), Xb,
-                    committee=committee,
+                self._fns[B] = make_batch_predict(
+                    learner, spec, self.config.mesh,
+                    committee=committee, use_pallas=use_pallas,
                 )
-                preds = jax.vmap(member)(jnp.arange(T))  # [T, B]
-                used = (jnp.arange(T) < count).astype(jnp.float32) * alpha
-                return ops.vote_argmax(
-                    preds, used, n_classes=spec.n_classes, use_pallas=use_pallas
-                )
+            else:
 
-            self._fns[B] = jax.jit(batch_predict)
+                def batch_predict(params, alpha, count, Xb):
+                    T = alpha.shape[0]
+                    member = lambda t: scoring.member_prediction(
+                        learner, spec, scoring._take_slot(params, t), Xb,
+                        committee=committee,
+                    )
+                    preds = jax.vmap(member)(jnp.arange(T))  # [T, B]
+                    used = (jnp.arange(T) < count).astype(jnp.float32) * alpha
+                    return ops.vote_argmax(
+                        preds, used, n_classes=spec.n_classes, use_pallas=use_pallas
+                    )
+
+                self._fns[B] = jax.jit(batch_predict)
             self.stats.compiles += 1
         return self._fns[B]
 
@@ -181,10 +254,32 @@ class ServeEngine:
             self.results[rid] = int(p)
             self.stats.request_latencies.append(done - t_submit)
 
+    # -- async deadline dispatch --------------------------------------------
+    def scheduler(self, *, t_max_s: Optional[float] = None):
+        """Start a ``serve/scheduler.DeadlineScheduler`` over this engine:
+        full batches dispatch immediately, a partial batch dispatches on
+        its own once the oldest queued deadline (default
+        ``config.t_max_s``) arrives — no ``flush`` call needed."""
+        from repro.serve.scheduler import DeadlineScheduler
+
+        return DeadlineScheduler(self, t_max_s=t_max_s)
+
     # -- live ensemble swap -------------------------------------------------
     def update_ensemble(self, ensemble: boosting.Ensemble) -> None:
         """Swap in a grown ensemble; shapes are static so the warm compile
-        cache (keyed by batch size only) stays valid."""
-        if ensemble.alpha.shape != self.ensemble.alpha.shape:
-            raise ValueError("ensemble capacity changed; build a new engine")
+        cache (keyed by batch size only) stays valid.
+
+        Capacity alone is NOT identity: an artifact from a different
+        learner/spec can share ``alpha.shape`` while its params pytree
+        differs, and swapping it in would make the warm compiled predict
+        serve garbage.  The full structural signature (treedef + leaf
+        shapes/dtypes — the same check ``save_artifact`` applies against
+        its manifest template) must match the live ensemble."""
+        got, want = ensemble_signature(ensemble), ensemble_signature(self.ensemble)
+        if got != want:
+            raise ValueError(
+                "ensemble does not match the serving ensemble's structure "
+                f"(treedef + leaf shapes/dtypes): {got} != {want}; "
+                "build a new engine for a different learner/spec/capacity"
+            )
         self.ensemble = ensemble

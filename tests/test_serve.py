@@ -97,6 +97,47 @@ def test_artifact_rejects_corruption(tmp_path):
         load_artifact(path)
 
 
+def test_artifact_truncation_raises_valueerror_at_every_byte(tmp_path):
+    """A file cut ANYWHERE — inside the magic, inside the u32 manifest
+    length, mid-manifest, mid-payload — must raise the documented
+    ValueError, never a raw struct.error / JSONDecodeError."""
+    _, spec, ens, _ = _small_ensemble("ridge", jax.random.PRNGKey(2))
+    data = save_artifact(tmp_path / "r.mafl", spec, ens).read_bytes()
+    path = tmp_path / "trunc.mafl"
+    for k in range(len(data)):  # every proper prefix, empty file included
+        path.write_bytes(data[:k])
+        with pytest.raises(ValueError):
+            load_artifact(path)
+
+
+def test_artifact_corrupt_manifest_raises_valueerror(tmp_path):
+    import json
+    import struct
+
+    from repro.serve.artifact import MAGIC
+
+    _, spec, ens, _ = _small_ensemble("ridge", jax.random.PRNGKey(2))
+    data = save_artifact(tmp_path / "r.mafl", spec, ens).read_bytes()
+    hdr = len(MAGIC) + 4
+    (mlen,) = struct.unpack("<I", data[len(MAGIC):hdr])
+    payload = data[hdr + mlen:]
+    path = tmp_path / "bad.mafl"
+
+    def rebuild(manifest_blob: bytes) -> None:
+        path.write_bytes(MAGIC + struct.pack("<I", len(manifest_blob))
+                         + manifest_blob + payload)
+
+    rebuild(b"\xff" * mlen)  # not JSON at all
+    with pytest.raises(ValueError, match="corrupt manifest"):
+        load_artifact(path)
+    rebuild(b"[1, 2, 3]")  # JSON, but not an object
+    with pytest.raises(ValueError, match="not a JSON object"):
+        load_artifact(path)
+    rebuild(json.dumps({"format_version": 1}).encode())  # object, keys missing
+    with pytest.raises(ValueError, match="missing required keys"):
+        load_artifact(path)
+
+
 # ---------------------------------------------------------------------------
 # Engine — bit-for-bit vs strong_predict, ragged tail included
 # ---------------------------------------------------------------------------
@@ -177,6 +218,35 @@ def test_engine_compile_cache_is_warm_across_batches():
     assert engine.stats.compiles == 1
 
 
+def test_update_ensemble_rejects_foreign_structure():
+    """Same alpha capacity is NOT identity: an ensemble from a different
+    learner (or a different spec of the same learner) must be rejected —
+    swapping it under the warm compiled predict would serve garbage."""
+    learner, spec, ens, X = _small_ensemble("decision_tree", jax.random.PRNGKey(15))
+    engine = ServeEngine(learner, spec, ens, batch_size=64)
+    engine.predict(np.asarray(X))
+
+    # different learner, same capacity T=3 and same alpha shape
+    _, _, foreign, _ = _small_ensemble("ridge", jax.random.PRNGKey(16))
+    assert foreign.alpha.shape == ens.alpha.shape
+    with pytest.raises(ValueError, match="structure"):
+        engine.update_ensemble(foreign)
+
+    # same learner, different hparams -> different leaf shapes
+    shallow_spec = LearnerSpec("decision_tree", spec.n_features, 3,
+                               {"depth": 2, "n_bins": 8})
+    shallow = boosting.init_ensemble(learner, shallow_spec, 3, jax.random.PRNGKey(17))
+    assert shallow.alpha.shape == ens.alpha.shape
+    with pytest.raises(ValueError, match="structure"):
+        engine.update_ensemble(shallow)
+
+    # a genuinely matching ensemble still swaps in without recompiling
+    compiles = engine.stats.compiles
+    engine.update_ensemble(ens._replace(alpha=ens.alpha * 2.0))
+    engine.predict(np.asarray(X))
+    assert engine.stats.compiles == compiles
+
+
 # ---------------------------------------------------------------------------
 # Shard-resident vote cache — correctness while the ensemble grows
 # ---------------------------------------------------------------------------
@@ -209,7 +279,7 @@ def test_vote_cache_correct_when_ensemble_grows():
     np.testing.assert_array_equal(p2, want2)
     assert cache.stats() == {
         "shards": 1, "hits": 1, "partial_hits": 1, "misses": 1,
-        "members_folded": 6,
+        "members_folded": 6, "reregistrations": 0,
     }
     with pytest.raises(ValueError, match="shrank"):
         cache.update_ensemble(state.ensemble._replace(count=jnp.zeros((), jnp.int32)))
@@ -225,6 +295,34 @@ def test_vote_cache_correct_when_ensemble_grows():
     p3 = cache.predict("q", Xq2)
     want3 = np.asarray(boosting.strong_predict(learner, spec, state.ensemble, Xq2))
     np.testing.assert_array_equal(p3, want3)
+    assert cache.stats()["reregistrations"] == 1  # counted, not silent
+
+
+def test_vote_cache_fingerprint_is_dtype_insensitive():
+    """Repeat traffic held in float64 by the caller must stay a cache
+    hit: the cache serves float32, so the fingerprint is taken over the
+    f32-normalised rows — a f64 re-send of the same rows is the SAME
+    shard, not a re-registration (which would rebuild the tally and turn
+    every hit into a full-tally miss)."""
+    learner, spec, ens, _ = _small_ensemble("decision_tree", jax.random.PRNGKey(30))
+    Xq, _ = _blobs(jax.random.PRNGKey(31), n=90)
+    X32 = np.asarray(Xq, np.float32)
+    X64 = X32.astype(np.float64)
+
+    cache = ShardVoteCache(learner, spec, ens)
+    want = cache.predict("s", X32)  # miss: builds residency
+    for _ in range(3):  # dtype-mismatched repeat traffic stays a pure hit
+        np.testing.assert_array_equal(cache.predict("s", X64), want)
+    st = cache.stats()
+    assert st == {
+        "shards": 1, "hits": 3, "partial_hits": 0, "misses": 1,
+        "members_folded": 3, "reregistrations": 0,
+    }
+    # and the other direction: first contact in f64, repeats in f32
+    cache2 = ShardVoteCache(learner, spec, ens)
+    np.testing.assert_array_equal(cache2.predict("s", X64), want)
+    np.testing.assert_array_equal(cache2.predict("s", X32), want)
+    assert cache2.stats()["hits"] == 1 and cache2.stats()["reregistrations"] == 0
 
 
 # ---------------------------------------------------------------------------

@@ -55,6 +55,29 @@ SCRIPT = textwrap.dedent(
     np.testing.assert_allclose(
         np.asarray(state.weights), np.asarray(state2.weights), rtol=1e-4, atol=1e-9
     )
+
+    # serving: ONE engine spans the mesh — EngineConfig(mesh=...) routes
+    # every static batch through fl/sharded.make_batch_predict (batch
+    # axis split over the 4 data shards), bit-for-bit vs the local engine
+    from repro.serve import EngineConfig, ServeEngine
+    Xte_n = np.asarray(Xte[:n])
+    want_serve = ServeEngine(learner, lspec, state.ensemble, batch_size=64).predict(Xte_n)
+    with compat.set_mesh(mesh):
+        mesh_eng = ServeEngine(
+            learner, lspec, state.ensemble, config=EngineConfig(batch_size=64, mesh=mesh)
+        )
+        got_serve = mesh_eng.predict(Xte_n)
+        with mesh_eng.scheduler(t_max_s=0.05) as sched:  # deadline loop on top
+            ids = sched.submit(Xte_n[:5])
+            sched_serve = sched.results(ids, timeout_s=60.0)
+    np.testing.assert_array_equal(got_serve, want_serve)
+    np.testing.assert_array_equal(sched_serve, want_serve[:5])
+    try:  # multi-shard admission: B must divide over the federation shards
+        ServeEngine(learner, lspec, state.ensemble,
+                    config=EngineConfig(batch_size=30, mesh=mesh))
+        raise SystemExit("admission must reject B=30 over 4 shards")
+    except ValueError:
+        pass
     print("SHARDED_OK", f1_sharded)
     """
 )
