@@ -1,0 +1,145 @@
+"""Heterogeneous-federation benchmark — what mixing model families by
+collaborator costs, train side and serve side.
+
+Training: fused AdaBoost.F round time for a homogeneous tree federation
+vs 2-mix (trees+ridge) vs 3-mix (trees+ridge+NB) on the same partition.
+The grouped round still batch-fits each learner group in one tensor
+program, but the cross-group prediction tensor runs G predict families
+instead of one — the measured delta is that serving-side mixture cost at
+train time.
+
+Serving: the mixed ensemble behind ONE engine (per-group member
+predicts feeding a single ``vote_argmax``) vs the homogeneous engine on
+the same capacity, plus the v2 artifact size and save+load round-trip.
+Every timed path is asserted bit-for-bit against the grouped
+``hetero_strong_predict`` first.
+
+Writes ``BENCH_heterogeneous.json`` (committed baseline on full runs).
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks.common import Reporter, timeit
+from repro.core import boosting, hetero
+from repro.core.hetero import HeterogeneousSpec
+from repro.data import get_dataset
+from repro.fl.partition import iid_partition
+from repro.learners import LearnerSpec, get_learner
+from repro.serve import ServeEngine, load_artifact, save_artifact
+
+MIXES = {
+    "homogeneous_tree": ["decision_tree"],
+    "mix2_tree_ridge": ["decision_tree", "ridge"],
+    "mix3_tree_ridge_nb": ["decision_tree", "ridge", "gaussian_nb"],
+}
+HPARAMS = {"decision_tree": {"depth": 4, "n_bins": 16}}
+
+
+def main(quick: bool = False) -> None:
+    rep = Reporter("heterogeneous")
+    C = 6
+    rounds = 4 if quick else 10
+    dataset = "pendigits" if quick else "adult"
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    dspec, (Xtr, ytr, Xte, yte) = get_dataset(dataset, k1)
+    Xs, ys, masks = iid_partition(Xtr, ytr, C, k2)
+    Xte_np = np.asarray(Xte, np.float32)
+
+    ensembles = {}
+    for mix_name, names in MIXES.items():
+        hs = HeterogeneousSpec.cycle(
+            names, C, dspec.n_features, dspec.n_classes,
+            hparams={n: HPARAMS.get(n, {}) for n in names},
+        )
+        state = hetero.init_hetero_boost_state(hs, rounds, masks, k3, X=Xs)
+        rfn = jax.jit(lambda s, hs=hs: hetero.hetero_adaboost_f_round(hs, s, Xs, ys, masks))
+
+        def run_round(state=state, rfn=rfn):
+            jax.block_until_ready(rfn(state)[0].weights)
+
+        sec = timeit(run_round, repeats=2 if quick else 3)
+        # the measured state for serving: actually advance it
+        for _ in range(rounds):
+            state, _ = rfn(state)
+        jax.block_until_ready(state.ensemble[0].alpha)
+        ensembles[mix_name] = (hs, state.ensemble)
+        rep.add(
+            f"fused_round/{mix_name}",
+            us_per_call=sec * 1e6,
+            groups=hs.n_groups,
+            collaborators=C,
+            dataset=dataset,
+            ms_per_round=round(sec * 1e3, 2),
+        )
+
+    # -- serving the 3-mix behind one engine --------------------------------
+    hs, hens = ensembles["mix3_tree_ridge_nb"]
+    want = np.asarray(hetero.hetero_strong_predict(hs, hens, Xte))
+    with tempfile.TemporaryDirectory() as td:
+        path = Path(td) / "mix.mafl"
+        t0 = time.perf_counter()
+        save_artifact(path, hs, hens)
+        art = load_artifact(path)
+        rt = time.perf_counter() - t0
+        counts = {k: art.manifest["member_learners"].count(k)
+                  for k in set(art.manifest["member_learners"])}
+        engine = ServeEngine.from_artifact(art, batch_size=256)
+        engine.warmup()
+        got = engine.predict(Xte_np)
+        np.testing.assert_array_equal(got, want)  # never time a wrong answer
+        n = Xte_np.shape[0]
+        reps = 3 if quick else 10
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            engine.predict(Xte_np)
+        dt = (time.perf_counter() - t0) / reps
+        rep.add(
+            "serve/mix3_engine",
+            us_per_call=dt / n * 1e6,
+            req_per_s=round(n / dt),
+            artifact_bytes=path.stat().st_size,
+            save_load_ms=round(rt * 1e3, 2),
+            member_keys=json_safe(counts),
+            members=art.manifest["ensemble_count"],
+        )
+
+    # homogeneous reference engine at the same capacity
+    lspec = LearnerSpec("decision_tree", dspec.n_features, dspec.n_classes,
+                        HPARAMS["decision_tree"])
+    learner = get_learner("decision_tree")
+    hs1, hens1 = ensembles["homogeneous_tree"]
+    eng1 = ServeEngine(learner, lspec, hens1[0], batch_size=256)
+    eng1.warmup()
+    want1 = np.asarray(boosting.strong_predict(learner, lspec, hens1[0], Xte))
+    np.testing.assert_array_equal(eng1.predict(Xte_np), want1)
+    n = Xte_np.shape[0]
+    reps = 3 if quick else 10
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        eng1.predict(Xte_np)
+    dt = (time.perf_counter() - t0) / reps
+    rep.add(
+        "serve/homogeneous_engine",
+        us_per_call=dt / n * 1e6,
+        req_per_s=round(n / dt),
+        members=int(hens1[0].count),
+    )
+    rep.finish(baseline=not quick)  # quick runs must not rewrite the baseline
+
+
+def json_safe(d):
+    return {str(k): int(v) for k, v in sorted(d.items())}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(**vars(ap.parse_args()))

@@ -16,6 +16,7 @@ import traceback
 from benchmarks import (
     bench_correctness,
     bench_flexibility,
+    bench_heterogeneous,
     bench_kernels,
     bench_learning_curves,
     bench_optimizations,
@@ -26,6 +27,7 @@ from benchmarks import (
 BENCHES = {
     "kernels": bench_kernels.main,  # fastest first
     "serve": bench_serve.main,
+    "heterogeneous": bench_heterogeneous.main,
     "optimizations_fig3": bench_optimizations.main,
     "flexibility_fig4b": bench_flexibility.main,
     "learning_curves_fig4a": bench_learning_curves.main,

@@ -131,6 +131,7 @@ def init_boost_state(
 def _local_fits(
     learner, spec, w, X, y, key, fit_cache=None,
     *, batched=True, use_pallas=False, block_s=None, block_d=None,
+    keys=None,
 ):
     """Train one weak hypothesis per collaborator (paper step 2). [C, ...]
 
@@ -142,9 +143,15 @@ def _local_fits(
       * ``vmap(fit)``       — no cache (X-derived scaffold recomputed).
     All three agree bit-for-bit on the oracle path (``use_pallas=False``)
     — regression-tested in tests/test_binning.py.
+
+    ``keys`` overrides the per-collaborator key split: a heterogeneous
+    round splits ONE round key across all C collaborators and hands each
+    learner group its members' slice, so grouping never changes which
+    key a collaborator fits with (``core/hetero.py``).
     """
     C = X.shape[0]
-    keys = jax.random.split(key, C)
+    if keys is None:
+        keys = jax.random.split(key, C)
 
     if batched and fit_cache is not None and learner.fit_batched is not None:
         return learner.fit_batched(
@@ -152,7 +159,7 @@ def _local_fits(
             use_pallas=use_pallas, block_s=block_s, block_d=block_d,
         )
 
-    dummy = learner.init(spec, key)
+    dummy = learner.init(spec, keys[0])
 
     if fit_cache is not None and learner.fit_cached is not None:
         def fit_one_cached(Xi, yi, wi, ki, ci):
@@ -267,12 +274,13 @@ def distboost_f_round(
 # ---------------------------------------------------------------------------
 
 
-def preweak_f_setup(learner, spec, state, X, y, mask, T: int):
-    """Fuse steps 1+2: every collaborator runs T rounds of LOCAL AdaBoost,
-    shipping all T hypotheses; the federation then owns a C*T space."""
-    C, n = y.shape
-    keys = jax.random.split(state.key, C + 1)
-
+def _preweak_local_space(learner, spec, X, y, mask, keys, fit_cache, T: int):
+    """Steps 1+2 of PreWeak.F for one learner group: every collaborator
+    in the ``[C, ...]`` stack runs T rounds of LOCAL AdaBoost with its
+    per-collaborator key; returns the flat ``[C*T, ...]`` hypothesis
+    block.  Shared by the homogeneous setup below and the grouped
+    heterogeneous setup in ``core/hetero.py``."""
+    C = y.shape[0]
     cached = learner.precompute is not None and learner.fit_cached is not None
 
     def local_adaboost(Xi, yi, mi, ki, cache_i):
@@ -303,13 +311,21 @@ def preweak_f_setup(learner, spec, state, X, y, mask, T: int):
         _, ps = jax.lax.scan(round_, wi, jax.random.split(ki, T))
         return ps  # [T, ...]
 
-    if state.fit_cache is not None and cached:
-        hyps = jax.vmap(local_adaboost)(X, y, mask, keys[:C], state.fit_cache)
+    if fit_cache is not None and cached:
+        hyps = jax.vmap(local_adaboost)(X, y, mask, keys, fit_cache)
     else:
         hyps = jax.vmap(
             lambda Xi, yi, mi, ki: local_adaboost(Xi, yi, mi, ki, None)
-        )(X, y, mask, keys[:C])  # [C, T, ...]
-    flat = jax.tree.map(lambda x: x.reshape((C * T,) + x.shape[2:]), hyps)
+        )(X, y, mask, keys)  # [C, T, ...]
+    return jax.tree.map(lambda x: x.reshape((C * T,) + x.shape[2:]), hyps)
+
+
+def preweak_f_setup(learner, spec, state, X, y, mask, T: int):
+    """Fuse steps 1+2: every collaborator runs T rounds of LOCAL AdaBoost,
+    shipping all T hypotheses; the federation then owns a C*T space."""
+    C, n = y.shape
+    keys = jax.random.split(state.key, C + 1)
+    flat = _preweak_local_space(learner, spec, X, y, mask, keys[:C], state.fit_cache, T)
     return flat, BoostState(state.ensemble, state.weights, keys[-1], state.fit_cache)
 
 

@@ -98,6 +98,14 @@ class LearnerPlan:
     hparams: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
+# ``Plan.learners`` (heterogeneous federations): a non-empty tuple of
+# LearnerPlans is cycled across collaborators — collaborator i trains
+# learners[i % len(learners)].  ``Plan.learner`` is ignored when set.
+# The model-agnostic workflow never inspects hypothesis structure, so
+# any mix of registry keys is valid for adaboost_f/distboost_f/
+# preweak_f/bagging; fedavg averages parameters and stays homogeneous.
+
+
 @dataclasses.dataclass(frozen=True)
 class DataPlan:
     dataset: str = "adult"
@@ -114,6 +122,9 @@ class Plan:
     tasks: List[TaskSpec] = dataclasses.field(default_factory=list)
     algorithm: str = "adaboost_f"  # adaboost_f | distboost_f | preweak_f | bagging | fedavg
     learner: LearnerPlan = dataclasses.field(default_factory=LearnerPlan)
+    # heterogeneous federation: cycle these learner types across
+    # collaborators (empty tuple == homogeneous, use ``learner``)
+    learners: tuple = ()
     data: DataPlan = dataclasses.field(default_factory=DataPlan)
     optimizations: OptimizationFlags = dataclasses.field(default_factory=OptimizationFlags)
 
@@ -133,6 +144,17 @@ class Plan:
             raise ValueError("bagging is obtained by OMITTING adaboost_update (paper §4.1)")
         if self.aggregator.rounds != self.collaborator.rounds:
             raise ValueError("aggregator and collaborator round counts must agree")
+        if self.learners:
+            if self.algorithm == "fedavg":
+                raise ValueError(
+                    "heterogeneous learners require the model-agnostic workflow; "
+                    "fedavg averages parameters and cannot mix model families"
+                )
+            if not self.optimizations.fused_round:
+                raise ValueError(
+                    "heterogeneous learners require optimizations.fused_round: the "
+                    "interpreted simulation stacks one hypothesis pytree per round"
+                )
         return self
 
 
@@ -200,13 +222,16 @@ def plan_from_dict(d: Dict[str, Any]) -> Plan:
         tasks=tasks,
         algorithm=d.get("algorithm", "adaboost_f"),
         learner=LearnerPlan(**d.get("learner", {})),
+        learners=tuple(LearnerPlan(**l) for l in d.get("learners", [])),
         data=DataPlan(**d.get("data", {})),
         optimizations=OptimizationFlags(**d.get("optimizations", {})),
     ).validate()
 
 
 def plan_to_dict(p: Plan) -> Dict[str, Any]:
-    return dataclasses.asdict(p)
+    d = dataclasses.asdict(p)
+    d["learners"] = list(d.get("learners", ()))  # YAML has no tuple type
+    return d
 
 
 def load_plan(path: str) -> Plan:

@@ -17,8 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import boosting, protocol, scoring
+from repro.core import boosting, hetero, protocol, scoring
 from repro.core.aggregation import fedavg
+from repro.core.hetero import HeterogeneousSpec
 from repro.core.metrics import f1_macro
 from repro.core.plan import Plan
 from repro.core.serialization import deserialize, serialize, wire_format, wire_size
@@ -53,10 +54,34 @@ class Federation:
     long-lived Director/Envoy pair of OpenFL reduces to this factory in a
     single-process simulation)."""
 
-    def __init__(self, plan: Plan, Xs, ys, masks, X_test, y_test, spec: LearnerSpec, key):
+    def __init__(self, plan: Plan, Xs, ys, masks, X_test, y_test, spec, key):
+        """``spec`` is a ``LearnerSpec`` (homogeneous federation) or a
+        ``core/hetero.HeterogeneousSpec`` (per-collaborator learner
+        types).  A plan with a non-empty ``learners`` tuple upgrades a
+        plain LearnerSpec by cycling the plan's learner types across
+        collaborators (the LearnerSpec then only contributes the problem
+        geometry)."""
         plan.validate()
         self.plan = plan
-        self.learner = get_learner(spec.name)
+        if plan.learners and isinstance(spec, LearnerSpec):
+            spec = HeterogeneousSpec.cycle(
+                [lp.name for lp in plan.learners],
+                Xs.shape[0],
+                spec.n_features,
+                spec.n_classes,
+                hparams={lp.name: dict(lp.hparams) for lp in plan.learners},
+            )
+        self.hetero = isinstance(spec, HeterogeneousSpec)
+        if self.hetero:
+            if spec.n_collaborators != Xs.shape[0]:
+                raise ValueError(
+                    f"HeterogeneousSpec assigns {spec.n_collaborators} collaborators "
+                    f"but the partition has {Xs.shape[0]}"
+                )
+            hetero.resolve(spec)  # fail fast on unknown registry keys
+            self.learner = None  # per-group learners live in the spec
+        else:
+            self.learner = get_learner(spec.name)
         self.spec = spec
         self.key = key
         self.X_test, self.y_test = X_test, y_test
@@ -127,6 +152,14 @@ class Federation:
         their list-of-pairs ensemble and do not publish.
         """
         rounds = rounds or self.plan.aggregator.rounds
+        if self.hetero and not (
+            self.plan.optimizations.fused_round and self.plan.algorithm != "fedavg"
+        ):
+            raise ValueError(
+                "heterogeneous federations require the fused round path "
+                "(optimizations.fused_round on, non-fedavg algorithm): the "
+                "interpreted simulation and fedavg assume one hypothesis pytree"
+            )
         if publish_every is not None:
             if publish_every <= 0:
                 raise ValueError(f"publish_every must be positive, got {publish_every}")
@@ -138,7 +171,8 @@ class Federation:
                     "(optimizations.fused_round on, non-fedavg algorithm)"
                 )
         if self.plan.optimizations.fused_round and self.plan.algorithm != "fedavg":
-            return self._run_fused(
+            run = self._run_fused_hetero if self.hetero else self._run_fused
+            return run(
                 rounds, eval_every,
                 publish_every=publish_every, publish_dir=publish_dir,
                 on_checkpoint=on_checkpoint,
@@ -245,6 +279,85 @@ class Federation:
                 # the fused state owns the slot-buffer ensemble: each
                 # checkpoint is the same capacity with a larger count, so
                 # the artifact stream is append-only by construction
+                self._publish_checkpoint(state, r, publish_dir, on_checkpoint)
+        self._fused_state = state
+        return self.history
+
+    # -- fused fast path, heterogeneous: per-collaborator learner types ----
+    def _run_fused_hetero(
+        self, rounds: int, eval_every: int,
+        *, publish_every: Optional[int] = None, publish_dir: Optional[str] = None,
+        on_checkpoint=None,
+    ) -> List[Dict[str, float]]:
+        """The heterogeneous mirror of ``_run_fused``: same round loop,
+        same §5.1 toggles, but the state/round/eval machinery comes from
+        ``core/hetero.py`` (grouped fits, cross-group voting, per-group
+        vote tallies).  With a single learner group every step reduces
+        to the homogeneous operations bit-for-bit."""
+        hspec: HeterogeneousSpec = self.spec
+        Xs = jnp.stack([c.X for c in self.collaborators])
+        ys = jnp.stack([c.y for c in self.collaborators])
+        masks = jnp.stack([c.mask for c in self.collaborators])
+        opt = self.plan.optimizations
+        up = opt.use_pallas
+        committee = self.plan.algorithm == "distboost_f"
+        state = hetero.init_hetero_boost_state(
+            hspec, rounds, masks, self.key, committee=committee, X=Xs,
+        )
+        if self.plan.algorithm == "preweak_f":
+            setup = jax.jit(
+                lambda s, X, y, m: hetero.hetero_preweak_f_setup(
+                    hspec, s, X, y, m, rounds
+                )
+            )
+            spaces, state = setup(state, Xs, ys, masks)
+            cache = None
+            if opt.cache_predictions:
+                cache = jax.jit(
+                    lambda sp, X: hetero.hetero_preweak_f_predictions(hspec, sp, X)
+                )(spaces, Xs)
+            round_fn = jax.jit(
+                lambda s, X, y, m: hetero.hetero_preweak_f_round(
+                    hspec, s, spaces, X, y, m, pred_cache=cache, use_pallas=up,
+                )
+            )
+        else:
+            base = hetero.HETERO_ROUND_FNS[self.plan.algorithm]
+            round_fn = jax.jit(
+                lambda s, X, y, m: base(
+                    hspec, s, X, y, m, use_pallas=up,
+                    batched_fit=opt.batched_fit,
+                    block_s=opt.tree_block_s, block_d=opt.tree_block_d,
+                )
+            )
+        if opt.cache_predictions:
+            tallies = hetero.init_hetero_tally(
+                hspec, self.X_test.shape[0], committee=committee
+            )
+            tally_fn = jax.jit(
+                lambda ens, tl: hetero.hetero_tally_new_votes(
+                    hspec, ens, tl, self.X_test, committee=committee,
+                )
+            )
+        else:
+            predict = jax.jit(
+                lambda ens, X: hetero.hetero_strong_predict(
+                    hspec, ens, X, committee=committee
+                )
+            )
+        for r in range(rounds):
+            state, metrics = round_fn(state, Xs, ys, masks)
+            if (r + 1) % eval_every == 0 or r == rounds - 1:
+                if opt.cache_predictions:
+                    tallies = tally_fn(state.ensemble, tallies)
+                    pred = hetero.hetero_tally_predict(tallies)
+                else:
+                    pred = predict(state.ensemble, self.X_test)
+                f1 = f1_macro(self.y_test, pred, hspec.n_classes)
+                self.history.append(
+                    {"round": r, "f1": float(f1), **{k: float(v) for k, v in metrics.items()}}
+                )
+            if publish_every and ((r + 1) % publish_every == 0 or r == rounds - 1):
                 self._publish_checkpoint(state, r, publish_dir, on_checkpoint)
         self._fused_state = state
         return self.history

@@ -36,21 +36,47 @@ def dirichlet_partition(
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Label-skew non-IID split: class c's samples are divided among
     collaborators by Dirichlet(alpha) proportions.  Fixed-shape output via
-    padding to the largest local shard."""
+    padding to the largest local shard.
+
+    Every collaborator is guaranteed at least one sample.  At small
+    ``alpha`` (e.g. 0.05) the Dirichlet proportions concentrate and a
+    draw can leave a collaborator with an empty shard — an all-zero mask
+    row whose local fit is degenerate (uniform weights over nothing) and
+    whose hypothesis still enters the global vote.  The draw is
+    resampled a bounded number of times; if skew is so extreme that
+    every redraw fails, single samples move from the largest shards to
+    the empty ones (the minimal-distortion repair)."""
+    if len(np.asarray(y)) < n_collaborators:
+        raise ValueError(
+            f"cannot give each of {n_collaborators} collaborators a sample "
+            f"from {len(np.asarray(y))} total"
+        )
     Xn, yn = np.asarray(X), np.asarray(y)
     K = n_classes or int(yn.max()) + 1
     rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
 
-    owners = np.empty(len(yn), dtype=np.int64)
-    for c in range(K):
-        idx = np.where(yn == c)[0]
-        rng.shuffle(idx)
-        props = rng.dirichlet([alpha] * n_collaborators)
-        cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
-        for i, part in enumerate(np.split(idx, cuts)):
-            owners[part] = i
+    def draw() -> np.ndarray:
+        owners = np.empty(len(yn), dtype=np.int64)
+        for c in range(K):
+            idx = np.where(yn == c)[0]
+            rng.shuffle(idx)
+            props = rng.dirichlet([alpha] * n_collaborators)
+            cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+            for i, part in enumerate(np.split(idx, cuts)):
+                owners[part] = i
+        return owners
 
+    owners = draw()
+    for _ in range(20):  # resample while any collaborator is empty
+        if np.bincount(owners, minlength=n_collaborators).min() > 0:
+            break
+        owners = draw()
     counts = np.bincount(owners, minlength=n_collaborators)
+    for i in np.where(counts == 0)[0]:  # fallback: move one from the richest
+        donor = int(np.argmax(counts))
+        owners[np.where(owners == donor)[0][0]] = i
+        counts = np.bincount(owners, minlength=n_collaborators)
+    assert counts.min() > 0, "dirichlet_partition produced an empty collaborator"
     n_max = max(int(counts.max()), 1)
     d = Xn.shape[1]
     Xs = np.zeros((n_collaborators, n_max, d), Xn.dtype)

@@ -3,11 +3,17 @@
   PYTHONPATH=src python -m repro.launch.fl_run --dataset adult --rounds 100 \
       --collaborators 8 --learner decision_tree --algorithm adaboost_f
 
+  # heterogeneous federation: cycle learner types across collaborators
+  PYTHONPATH=src python -m repro.launch.fl_run --dataset adult --rounds 100 \
+      --collaborators 8 --learners decision_tree,ridge,gaussian_nb
+
 Modes:
   default    — fused jit round (all §5.1 optimisations on)
   --faithful — interpreted OpenFL-style round (serialization + TensorDB +
                polling barriers), the pre-optimisation behaviour
   --sharded  — SPMD shard_map round over the host mesh (requires >1 device)
+  --learners — comma-separated registry keys cycled across collaborators
+               (heterogeneous federation; fused mode only)
 """
 from __future__ import annotations
 
@@ -17,6 +23,7 @@ import time
 import jax
 
 from repro import compat
+from repro.core.hetero import HeterogeneousSpec
 from repro.core.metrics import f1_macro
 from repro.core.plan import OptimizationFlags, adaboost_plan, bagging_plan, fedavg_plan
 from repro.data import get_dataset
@@ -25,12 +32,25 @@ from repro.fl.partition import partition
 from repro.learners import LearnerSpec
 
 
+def default_hparams(name: str, depth: int = 4) -> dict:
+    """Per-family CLI defaults (shared by fl_run/serve_fl/--learners)."""
+    if name in ("decision_tree", "extra_tree"):
+        return {"depth": depth, "n_bins": 16}
+    if name == "mlp":
+        return {"hidden": 64, "steps": 200, "local_steps": 20}
+    return {}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="adult")
     ap.add_argument("--algorithm", default="adaboost_f",
                     choices=["adaboost_f", "distboost_f", "preweak_f", "bagging", "fedavg"])
     ap.add_argument("--learner", default="decision_tree")
+    ap.add_argument("--learners", default=None,
+                    help="comma-separated learner registry keys cycled across "
+                         "collaborators (e.g. decision_tree,ridge,gaussian_nb) — "
+                         "a heterogeneous federation; overrides --learner")
     ap.add_argument("--collaborators", type=int, default=8)
     ap.add_argument("--rounds", type=int, default=100)
     ap.add_argument("--split", default="iid", choices=["iid", "dirichlet"])
@@ -53,10 +73,26 @@ def main(argv=None):
         **({"alpha": args.dirichlet_alpha, "n_classes": dspec.n_classes}
            if args.split == "dirichlet" else {}),
     )
-    hp = {"depth": args.depth, "n_bins": 16}
-    if args.learner == "mlp":
-        hp = {"hidden": 64, "local_steps": 20}
-    lspec = LearnerSpec(args.learner, dspec.n_features, dspec.n_classes, hp)
+    if args.learners:
+        names = [n.strip() for n in args.learners.split(",") if n.strip()]
+        if args.sharded:
+            ap.error("--learners is fused-mode only: the SPMD round runs one "
+                     "program per device and cannot mix model structures")
+        if args.faithful:
+            ap.error("--learners is fused-mode only; drop --faithful")
+        if args.algorithm == "fedavg":
+            ap.error("fedavg averages parameters and cannot mix model families")
+        lspec = HeterogeneousSpec.cycle(
+            names, args.collaborators, dspec.n_features, dspec.n_classes,
+            hparams={n: default_hparams(n, args.depth) for n in names},
+        )
+        print("heterogeneous federation:",
+              {i: lspec.specs[g].name for i, g in enumerate(lspec.assignment)})
+    else:
+        lspec = LearnerSpec(
+            args.learner, dspec.n_features, dspec.n_classes,
+            default_hparams(args.learner, args.depth),
+        )
 
     if args.sharded:
         return _run_sharded(args, lspec, Xs, ys, masks, Xte, yte, k3)

@@ -16,6 +16,13 @@ continuous train→publish→serve loop.
       --learner decision_tree --rounds 10 --publish-every 2 \
       --publish-dir /tmp/pendigits_pub
 
+  # heterogeneous: cycle learner types across collaborators; the mixed
+  # ensemble trains, publishes one v2 artifact (per-member learner keys
+  # in the manifest) and serves behind the same engine API:
+  PYTHONPATH=src python -m repro.launch.serve_fl --dataset pendigits \
+      --learners decision_tree,ridge,gaussian_nb --collaborators 6 \
+      --rounds 10 --publish-every 2 --publish-dir /tmp/pendigits_hetero
+
 Serving drives the micro-batching engine over the test split (ragged
 tail included) under the chosen dispatch policy — ``--policy sync``
 (submit/flush) or ``--policy deadline`` (async dispatch loop: a partial
@@ -31,10 +38,12 @@ import time
 import jax
 import numpy as np
 
-from repro.core import boosting
+from repro.core import boosting, hetero
+from repro.core.hetero import HeterogeneousSpec
 from repro.core.metrics import f1_macro
 from repro.data import get_dataset
 from repro.fl.partition import iid_partition
+from repro.launch.fl_run import default_hparams
 from repro.learners import LearnerSpec, get_learner
 from repro.serve import ServeEngine, ShardVoteCache, load_artifact, save_artifact
 
@@ -44,15 +53,27 @@ def _percentile(xs, q):
 
 
 def train_ensemble(args, lspec, learner, Xtr, ytr, key):
+    """AdaBoost.F training loop for either spec flavour (``learner`` is
+    None when ``lspec`` is a HeterogeneousSpec)."""
     Xs, ys, masks = iid_partition(Xtr, ytr, args.collaborators, key)
-    state = boosting.init_boost_state(
-        learner, lspec, args.rounds, masks, jax.random.fold_in(key, 1), X=Xs
-    )
-    rfn = jax.jit(
-        lambda s: boosting.adaboost_f_round(
-            learner, lspec, s, Xs, ys, masks, use_pallas=args.use_pallas
+    if isinstance(lspec, HeterogeneousSpec):
+        state = hetero.init_hetero_boost_state(
+            lspec, args.rounds, masks, jax.random.fold_in(key, 1), X=Xs
         )
-    )
+        rfn = jax.jit(
+            lambda s: hetero.hetero_adaboost_f_round(
+                lspec, s, Xs, ys, masks, use_pallas=args.use_pallas
+            )
+        )
+    else:
+        state = boosting.init_boost_state(
+            learner, lspec, args.rounds, masks, jax.random.fold_in(key, 1), X=Xs
+        )
+        rfn = jax.jit(
+            lambda s: boosting.adaboost_f_round(
+                learner, lspec, s, Xs, ys, masks, use_pallas=args.use_pallas
+            )
+        )
     t0 = time.time()
     for _ in range(args.rounds):
         state, _ = rfn(state)
@@ -144,15 +165,11 @@ def publish_and_consume(args, lspec, learner, Xtr, ytr, Xte, yte, key):
         nonlocal engine, cache
         art = load_artifact(path)
         if engine is None:  # first checkpoint: build the serving side
-            engine = ServeEngine(
-                art.learner, art.spec, art.ensemble,
-                batch_size=args.batch, committee=art.committee,
-                use_pallas=args.use_pallas,
+            engine = ServeEngine.from_artifact(
+                art, batch_size=args.batch, use_pallas=args.use_pallas
             )
             engine.warmup()
-            cache = ShardVoteCache(
-                art.learner, art.spec, art.ensemble, committee=art.committee
-            )
+            cache = ShardVoteCache.from_artifact(art)
         else:  # rolling checkpoint: a pure append — no recompile, no rebuild
             engine.update_ensemble(art.ensemble)
             cache.update_ensemble(art.ensemble)
@@ -179,9 +196,16 @@ def publish_and_consume(args, lspec, learner, Xtr, ytr, Xte, yte, key):
     assert cache.stats()["members_folded"] == int(final.manifest["ensemble_count"]), \
         cache.stats()
     assert engine.stats.compiles == 1, "checkpoint swaps must not recompile"
-    want = np.asarray(
-        boosting.strong_predict(final.learner, final.spec, final.ensemble, Xte)
-    )
+    if final.hetero:
+        want = np.asarray(
+            hetero.hetero_strong_predict(
+                final.spec, final.ensemble, Xte, committee=final.committee
+            )
+        )
+    else:
+        want = np.asarray(
+            boosting.strong_predict(final.learner, final.spec, final.ensemble, Xte)
+        )
     got = cache.predict("test_split")
     np.testing.assert_array_equal(got, want)
     f1 = float(f1_macro(yte, got, lspec.n_classes))
@@ -193,6 +217,10 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="pendigits")
     ap.add_argument("--learner", default="decision_tree")
+    ap.add_argument("--learners", default=None,
+                    help="comma-separated learner registry keys cycled across "
+                         "collaborators — train/publish/serve a heterogeneous "
+                         "federation; overrides --learner")
     ap.add_argument("--collaborators", type=int, default=4)
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--depth", type=int, default=4)
@@ -224,15 +252,24 @@ def main(argv=None):
     k1, k2 = jax.random.split(key)
     dspec, (Xtr, ytr, Xte, yte) = get_dataset(args.dataset, k1)
 
-    hp = {"depth": args.depth, "n_bins": 16}
-    if args.learner == "mlp":
-        hp = {"hidden": 64, "steps": 200}
+    def build_spec():
+        if args.learners:
+            names = [n.strip() for n in args.learners.split(",") if n.strip()]
+            hspec = HeterogeneousSpec.cycle(
+                names, args.collaborators, dspec.n_features, dspec.n_classes,
+                hparams={n: default_hparams(n, args.depth) for n in names},
+            )
+            return hspec, None  # per-group learners live in the spec
+        return (
+            LearnerSpec(args.learner, dspec.n_features, dspec.n_classes,
+                        default_hparams(args.learner, args.depth)),
+            get_learner(args.learner),
+        )
 
     if args.publish_every is not None:
         if not args.publish_dir:
             ap.error("--publish-every requires --publish-dir")
-        lspec = LearnerSpec(args.learner, dspec.n_features, dspec.n_classes, hp)
-        learner = get_learner(args.learner)
+        lspec, learner = build_spec()
         return publish_and_consume(args, lspec, learner, Xtr, ytr, Xte, yte, k2)
 
     committee = False
@@ -245,8 +282,7 @@ def main(argv=None):
         print(f"loaded {args.artifact}: {art.manifest['learner']} x "
               f"{art.manifest['ensemble_count']} members")
     else:
-        lspec = LearnerSpec(args.learner, dspec.n_features, dspec.n_classes, hp)
-        learner = get_learner(args.learner)
+        lspec, learner = build_spec()
         ensemble = train_ensemble(args, lspec, learner, Xtr, ytr, k2)
         if args.artifact:
             p = save_artifact(args.artifact, lspec, ensemble,

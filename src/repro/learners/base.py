@@ -1,4 +1,4 @@
-"""Model-agnostic weak-learner interface.
+"""Model-agnostic weak-learner interface — the full registry contract.
 
 MAFL's central claim is that the federated protocol never inspects the
 model: a weak hypothesis is an *opaque pytree* plus pure functions. Every
@@ -12,6 +12,82 @@ with **fixed shapes** so that:
 
 Sample weights ``w`` implement both AdaBoost weighting and masking
 (padded samples carry ``w == 0``); labels are int32 in ``[0, n_classes)``.
+
+The registry contract
+---------------------
+``register(WeakLearner(...))`` puts a learner behind a string key.  The
+key is the learner's identity EVERYWHERE downstream: ``LearnerSpec.name``
+selects it for training, the serving artifact manifest records it
+(``serve/artifact.py``), and a heterogeneous federation
+(``core/hetero.py``) assigns one key per collaborator.  To participate —
+including as one group of a mixed federation — an implementation must
+satisfy:
+
+  required
+    ``init(spec, key) -> params``
+        Shape-deterministic: for a fixed ``spec`` the returned pytree's
+        treedef and every leaf's shape/dtype must not depend on ``key``
+        (keys may only seed *values*).  Artifact loading rebuilds the
+        ensemble structure from ``init`` alone, and the ensemble slot
+        buffer pre-allocates ``T`` stacked copies of it.
+    ``fit(spec, params, X, y, w, key) -> params``
+        Pure, fixed-shape: X [n, d] f32, y [n] i32, w [n] f32 (>= 0;
+        ``w == 0`` rows are masked padding and must not influence the
+        hypothesis).  Must ignore incoming ``params`` values (each
+        boosting round fits from scratch) and return a pytree with the
+        ``init`` structure.  Must tolerate degenerate weights (an
+        all-zero shard must not NaN — guard divisions).
+    ``predict_logits(spec, params, X) -> [n, K]``
+        Pure per-class scores; ``predict`` takes their argmax.  Must be
+        traceable with X batched under vmap AND with ``params`` coming
+        from a traced ensemble slot (no host-side indexing).
+
+  optional, unlock specific subsystems
+    ``warm_fit``     — gradient-style continuation from broadcast
+                       params; REQUIRED only for the FedAvg/DNN workflow
+                       (meaningless for closed-form fits; fedavg is also
+                       the one workflow heterogeneous federations
+                       exclude, since it averages parameters).
+    ``precompute`` / ``fit_cached`` — the X-only fit cache (see the
+                       field comments below).  Without them a learner
+                       still joins every federation; rounds just redo
+                       the X-derived scaffold.
+    ``fit_batched``  — collaborator-batched fit, one tensor program for
+                       all C members of a (sub)federation.  In a
+                       heterogeneous federation each learner GROUP runs
+                       its own ``fit_batched`` over its members, so a
+                       kernel-backed learner keeps its one-launch fit
+                       even when mixed with closed-form families.
+
+Registering a new learner
+-------------------------
+A minimal example (a weighted class-prior stump)::
+
+    import jax.numpy as jnp
+    from repro.learners.base import (
+        LearnerSpec, WeakLearner, register, weighted_onehot,
+    )
+
+    def init(spec, key):
+        return {"log_prior": jnp.zeros((spec.n_classes,))}
+
+    def fit(spec, params, X, y, w, key):
+        del params, key  # fresh fit; key unused by the closed form
+        counts = jnp.sum(weighted_onehot(y, w, spec.n_classes), axis=0)
+        prior = counts / jnp.maximum(jnp.sum(counts), 1e-12)
+        return {"log_prior": jnp.log(prior + 1e-12)}
+
+    def predict_logits(spec, params, X):
+        return jnp.broadcast_to(params["log_prior"], (X.shape[0], spec.n_classes))
+
+    prior_stump = register(WeakLearner("prior_stump", init, fit, predict_logits))
+
+After ``register``, ``"prior_stump"`` works everywhere a registry key is
+accepted: ``LearnerSpec("prior_stump", ...)``, ``fl_run --learner`` /
+``--learners decision_tree,prior_stump,...``, artifact manifests, and
+the serving engine.  Registration is process-local: loading an artifact
+that names a key requires the defining module to have been imported
+(the built-ins auto-register via ``repro.learners``).
 """
 from __future__ import annotations
 

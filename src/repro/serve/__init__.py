@@ -1,7 +1,11 @@
 """Model-agnostic ensemble serving engine.
 
 Takes a federation's trained strong hypothesis all the way to
-high-throughput batched inference, for *any* registered weak learner:
+high-throughput batched inference, for *any* registered weak learner —
+or any mix of them: heterogeneous ensembles (``core/hetero.py``) load
+from the same artifact file and serve behind the same engine/cache APIs
+(``ServeEngine.from_artifact`` / ``ShardVoteCache.from_artifact`` pick
+the right flavour):
 
   * ``artifact``  — save/load a deployable single-file artifact
     (versioned manifest + the packed wire format of core/serialization),

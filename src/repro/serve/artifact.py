@@ -1,7 +1,7 @@
 """Deployable ensemble artifact — the federation's inference deliverable.
 
-A trained strong hypothesis (``boosting.Ensemble``) for ANY registered
-learner becomes one file:
+A trained strong hypothesis for ANY registered learner — or any MIX of
+registered learners (``core/hetero.py``) — becomes one file:
 
     MAFLSRV1 | u32 manifest_len | manifest JSON | packed payload
 
@@ -13,6 +13,16 @@ part: it names the learner (registry key), the learning problem
 used count, committee size), which is exactly enough to rebuild the
 pytree *structure* via ``learner.init`` + ``init_ensemble`` and pour the
 payload back into it — no pickle, no code in the artifact.
+
+Heterogeneous ensembles (format_version 2, ``"learner":
+"heterogeneous"``) additionally record the per-group learner specs, the
+collaborator→group ``assignment``, and the **per-member learner key
+list** (``member_learners`` — which model family cast each used vote,
+in the group-blocked member order), so a serving consumer knows exactly
+what it is running without touching the payload.  ``load_artifact``
+rejects manifests naming learner keys missing from this process's
+registry with the documented ``ValueError`` — an artifact must never
+silently deserialize into the wrong model family.
 
 A still-training federation publishes a ROLLING artifact stream with
 ``publish_artifact``: each checkpoint is a fresh versioned file plus an
@@ -30,24 +40,34 @@ from typing import Any, NamedTuple
 
 import jax
 
-from repro.core import boosting
+from repro.core import boosting, hetero
+from repro.core.hetero import HeterogeneousSpec
 from repro.core.serialization import deserialize, serialize, wire_format
-from repro.learners import LearnerSpec, WeakLearner, get_learner
+from repro.learners import LearnerSpec, WeakLearner, available_learners, get_learner
 
 MAGIC = b"MAFLSRV1"
-MANIFEST_VERSION = 1
+# Reader capability.  Homogeneous artifacts still write format_version 1
+# (their layout is unchanged — old readers keep working); heterogeneous
+# artifacts write 2.
+MANIFEST_VERSION = 2
+HOMOGENEOUS_VERSION = 1
+HETERO_LEARNER = "heterogeneous"  # the manifest "learner" key of a mix
 
 
 class LoadedArtifact(NamedTuple):
-    learner: WeakLearner
-    spec: LearnerSpec
-    ensemble: boosting.Ensemble
+    learner: WeakLearner | None  # None for heterogeneous artifacts
+    spec: LearnerSpec | HeterogeneousSpec
+    ensemble: Any  # boosting.Ensemble | hetero.HeteroEnsemble
     committee_size: int | None  # DistBoost.F stores a committee per slot
     manifest: dict
 
     @property
     def committee(self) -> bool:
         return self.committee_size is not None
+
+    @property
+    def hetero(self) -> bool:
+        return isinstance(self.spec, HeterogeneousSpec)
 
 
 def ensemble_signature(ensemble: boosting.Ensemble) -> tuple:
@@ -60,29 +80,62 @@ def ensemble_signature(ensemble: boosting.Ensemble) -> tuple:
     return treedef, [(tuple(l.shape), str(l.dtype)) for l in leaves]
 
 
+def _require_learner(name: str, context: str) -> WeakLearner:
+    """Registry lookup that raises the documented ``ValueError`` (an
+    artifact naming a learner this process cannot build must be
+    rejected, not crash with a bare KeyError)."""
+    try:
+        return get_learner(name)
+    except KeyError:
+        raise ValueError(
+            f"{context}: unknown learner key {name!r}; "
+            f"registered: {available_learners()}"
+        ) from None
+
+
 def _ensemble_template(
-    spec: LearnerSpec, T: int, committee_size: int | None
+    spec: LearnerSpec, T: int, committee_size: int | None, *, context: str = "artifact"
 ) -> boosting.Ensemble:
     """The pytree structure an artifact's payload pours back into.
 
     ``init_ensemble`` is shape-deterministic (keys only seed values), so
     saver and loader independently derive the same treedef + leaf
     shapes from the manifest alone."""
-    learner = get_learner(spec.name)
+    learner = _require_learner(spec.name, context)
     return boosting.init_ensemble(
         learner, spec, T, jax.random.PRNGKey(0), committee_size=committee_size
     )
 
 
+def _hetero_template(
+    hspec: HeterogeneousSpec, T: int, committee: bool, *, context: str = "artifact"
+) -> hetero.HeteroEnsemble:
+    for name in hspec.names:
+        _require_learner(name, context)
+    return hetero.init_hetero_ensemble(
+        hspec, T, jax.random.PRNGKey(0), committee=committee
+    )
+
+
 def save_artifact(
     path: str | Path,
-    spec: LearnerSpec,
-    ensemble: boosting.Ensemble,
+    spec: LearnerSpec | HeterogeneousSpec,
+    ensemble: Any,
     *,
     committee_size: int | None = None,
     extra: dict | None = None,
 ) -> Path:
-    """Write a single-file serving artifact; returns the path."""
+    """Write a single-file serving artifact; returns the path.
+
+    ``spec`` selects the artifact flavour: a ``LearnerSpec`` writes the
+    v1 homogeneous manifest, a ``HeterogeneousSpec`` (with ``ensemble``
+    the matching per-group tuple) writes the v2 heterogeneous one.  For
+    heterogeneous committees (DistBoost.F) ``committee_size`` is the
+    FEDERATION size — each slot stores one seat block per group."""
+    if isinstance(spec, HeterogeneousSpec):
+        return _save_hetero(
+            Path(path), spec, ensemble, committee_size=committee_size, extra=extra
+        )
     path = Path(path)
     template = _ensemble_template(spec, ensemble.alpha.shape[0], committee_size)
     got, want = ensemble_signature(ensemble), ensemble_signature(template)
@@ -92,7 +145,7 @@ def save_artifact(
         )
     (payload,) = serialize(ensemble, packed=True)
     manifest = {
-        "format_version": MANIFEST_VERSION,
+        "format_version": HOMOGENEOUS_VERSION,
         "learner": spec.name,
         "n_features": spec.n_features,
         "n_classes": spec.n_classes,
@@ -103,6 +156,10 @@ def save_artifact(
         "payload_bytes": len(payload),
         "payload_crc32": zlib.crc32(payload),
     }
+    return _write(path, manifest, payload, extra)
+
+
+def _write(path: Path, manifest: dict, payload: bytes, extra: dict | None) -> Path:
     overlap = set(extra or {}) & set(manifest)
     if overlap:
         raise ValueError(f"extra manifest keys shadow required fields: {sorted(overlap)}")
@@ -115,6 +172,66 @@ def save_artifact(
         f.write(blob)
         f.write(payload)
     return path
+
+
+def _save_hetero(
+    path: Path,
+    hspec: HeterogeneousSpec,
+    ensemble: hetero.HeteroEnsemble,
+    *,
+    committee_size: int | None,
+    extra: dict | None,
+) -> Path:
+    if committee_size is not None and committee_size != hspec.n_collaborators:
+        raise ValueError(
+            f"heterogeneous committees span the whole federation: committee_size "
+            f"must be {hspec.n_collaborators} (or None), got {committee_size}"
+        )
+    committee = committee_size is not None
+    T = int(ensemble[0].alpha.shape[0])
+    template = _hetero_template(hspec, T, committee)
+    got, want = ensemble_signature(ensemble), ensemble_signature(template)
+    if got != want:
+        raise ValueError(
+            f"ensemble does not match the heterogeneous template for groups "
+            f"{hspec.names}: {got} != {want}"
+        )
+    counts = [int(e.count) for e in ensemble]
+    if committee:
+        if len(set(counts)) != 1:
+            raise ValueError(f"committee group counts must move in lockstep: {counts}")
+        # every used member is one mixed committee: one seat per collaborator
+        seat_names = [hspec.specs[g].name for g in hspec.assignment]
+        member_learners: list = [seat_names] * counts[0]
+    else:
+        member_learners = [
+            hspec.specs[g].name for g in range(hspec.n_groups) for _ in range(counts[g])
+        ]
+    (payload,) = serialize(ensemble, packed=True)
+    manifest = {
+        "format_version": MANIFEST_VERSION,
+        "learner": HETERO_LEARNER,
+        "n_features": hspec.n_features,
+        "n_classes": hspec.n_classes,
+        "hparams": {},  # per-group hparams live in "groups"
+        "groups": [
+            {
+                "learner": s.name,
+                "hparams": dict(s.hparams),
+                "members": list(hspec.members(g)),
+                "count": counts[g],
+            }
+            for g, s in enumerate(hspec.specs)
+        ],
+        "assignment": list(hspec.assignment),
+        "member_learners": member_learners,
+        "ensemble_capacity": T,
+        "ensemble_count": hetero.hetero_count(ensemble, committee=committee),
+        "committee_size": committee_size,
+        "payload_bytes": len(payload),
+        "payload_crc32": zlib.crc32(payload),
+    }
+    return _write(path, manifest, payload, extra)
 
 
 _MANIFEST_KEYS = (
@@ -161,6 +278,8 @@ def load_artifact(path: str | Path) -> LoadedArtifact:
         )
     if zlib.crc32(payload) != manifest["payload_crc32"]:
         raise ValueError(f"{path}: payload checksum mismatch")
+    if manifest["learner"] == HETERO_LEARNER:
+        return _load_hetero(path, manifest, payload)
     spec = LearnerSpec(
         manifest["learner"],
         manifest["n_features"],
@@ -168,13 +287,44 @@ def load_artifact(path: str | Path) -> LoadedArtifact:
         dict(manifest["hparams"]),
     )
     template = _ensemble_template(
-        spec, manifest["ensemble_capacity"], manifest["committee_size"]
+        spec, manifest["ensemble_capacity"], manifest["committee_size"],
+        context=str(path),
     )
     ensemble = deserialize([payload], wire_format(template), packed=True)
     ensemble = jax.tree.map(jax.numpy.asarray, ensemble)
     return LoadedArtifact(
         learner=get_learner(spec.name),
         spec=spec,
+        ensemble=ensemble,
+        committee_size=manifest["committee_size"],
+        manifest=manifest,
+    )
+
+
+def _load_hetero(path, manifest: dict, payload: bytes) -> LoadedArtifact:
+    for k in ("groups", "assignment"):
+        if k not in manifest:
+            raise ValueError(f"{path}: heterogeneous manifest missing {k!r}")
+    specs = tuple(
+        LearnerSpec(
+            g["learner"], manifest["n_features"], manifest["n_classes"],
+            dict(g["hparams"]),
+        )
+        for g in manifest["groups"]
+    )
+    try:
+        hspec = HeterogeneousSpec(specs=specs, assignment=tuple(manifest["assignment"]))
+    except ValueError as e:
+        raise ValueError(f"{path}: invalid heterogeneous manifest: {e}") from e
+    committee = manifest["committee_size"] is not None
+    template = _hetero_template(
+        hspec, manifest["ensemble_capacity"], committee, context=str(path)
+    )
+    ensemble = deserialize([payload], wire_format(template), packed=True)
+    ensemble = jax.tree.map(jax.numpy.asarray, ensemble)
+    return LoadedArtifact(
+        learner=None,
+        spec=hspec,
         ensemble=ensemble,
         committee_size=manifest["committee_size"],
         manifest=manifest,
@@ -190,8 +340,8 @@ LATEST = "LATEST"
 
 def publish_artifact(
     publish_dir: str | Path,
-    spec: LearnerSpec,
-    ensemble: boosting.Ensemble,
+    spec: LearnerSpec | HeterogeneousSpec,
+    ensemble: Any,
     *,
     version: int,
     committee_size: int | None = None,

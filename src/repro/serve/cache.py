@@ -24,20 +24,23 @@ from __future__ import annotations
 
 import dataclasses
 import zlib
-from typing import Any, Dict, Hashable
+from typing import Any, Dict, Hashable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import boosting, scoring
+from repro.core import hetero, scoring
+from repro.core.hetero import HeterogeneousSpec
 from repro.learners.base import LearnerSpec, WeakLearner
 
 
 @dataclasses.dataclass
 class _Resident:
     X: jax.Array  # [n, d] — the shard's rows, pinned for member predicts
-    tally: scoring.VoteTally  # [n, K] running votes over members [0, counted)
+    # [n, K] running votes over members [0, counted): one VoteTally for a
+    # homogeneous ensemble, a per-group tuple for a heterogeneous one
+    tally: Any
     fingerprint: tuple  # (shape, crc32 of rows) — guards against key reuse
     counted: int = 0  # host mirror of tally.counted (no per-request sync)
 
@@ -54,19 +57,31 @@ def _fingerprint(X) -> tuple:
 class ShardVoteCache:
     def __init__(
         self,
-        learner: WeakLearner,
-        spec: LearnerSpec,
-        ensemble: boosting.Ensemble,
+        learner: Optional[WeakLearner],
+        spec: LearnerSpec | HeterogeneousSpec,
+        ensemble: Any,
         *,
         committee: bool = False,
     ):
+        """Homogeneous: ``(learner, LearnerSpec, Ensemble)``.
+        Heterogeneous: ``(None, HeterogeneousSpec, per-group tuple)`` —
+        resident shards then keep one tally per learner group (votes
+        commute, so the served answer is the argmax of the summed group
+        tallies; see ``core/hetero.py``)."""
+        self.hetero = isinstance(spec, HeterogeneousSpec)
+        if self.hetero and learner is not None:
+            raise ValueError(
+                "heterogeneous caches resolve per-group learners from the "
+                "HeterogeneousSpec; pass learner=None"
+            )
         self.learner = learner
         self.spec = spec
         self.ensemble = ensemble
         self.committee = committee
         # host mirrors so the hit path never blocks on a device scalar
-        self._count = int(ensemble.count)
-        self._alpha_crc = self._alpha_prefix_crc(ensemble, self._count)
+        self._count = self._used_count(ensemble)
+        self._counts = self._group_counts(ensemble)
+        self._alpha_crc = self._alpha_prefix_crc(ensemble, self._counts)
         self._shards: Dict[Hashable, _Resident] = {}
         self.hits = 0  # requests answered from the tally alone
         self.partial_hits = 0  # requests that folded only new members
@@ -75,13 +90,45 @@ class ShardVoteCache:
         self.reregistrations = 0  # key reuse with different rows (tally rebuilt)
         learner_, spec_, committee_ = learner, spec, committee
 
-        def _refresh(ens, tally, X):
-            return scoring.tally_new_votes(
-                learner_, spec_, ens, tally, X, committee=committee_
-            )
+        if self.hetero:
 
-        self._refresh = jax.jit(_refresh)
-        self._argmax = jax.jit(scoring.tally_predict)
+            def _refresh(ens, tallies, X):
+                return hetero.hetero_tally_new_votes(
+                    spec_, ens, tallies, X, committee=committee_
+                )
+
+            self._refresh = jax.jit(_refresh)
+            self._argmax = jax.jit(hetero.hetero_tally_predict)
+        else:
+
+            def _refresh(ens, tally, X):
+                return scoring.tally_new_votes(
+                    learner_, spec_, ens, tally, X, committee=committee_
+                )
+
+            self._refresh = jax.jit(_refresh)
+            self._argmax = jax.jit(scoring.tally_predict)
+
+    @classmethod
+    def from_artifact(cls, art) -> "ShardVoteCache":
+        """The cache counterpart of ``ServeEngine.from_artifact``."""
+        return cls(art.learner, art.spec, art.ensemble, committee=art.committee)
+
+    # -- homogeneous/heterogeneous count plumbing --------------------------
+    def _group_counts(self, ensemble) -> tuple:
+        if self.hetero:
+            return tuple(int(e.count) for e in ensemble)
+        return (int(ensemble.count),)
+
+    def _used_count(self, ensemble) -> int:
+        if self.hetero:
+            return hetero.hetero_count(ensemble, committee=self.committee)
+        return int(ensemble.count)
+
+    def _empty_tally(self, n: int):
+        if self.hetero:
+            return hetero.init_hetero_tally(self.spec, n, committee=self.committee)
+        return scoring.init_tally(n, self.spec.n_classes)
 
     def register(self, key: Hashable, X) -> None:
         """Pin a shard resident with an empty tally (no predicts yet)."""
@@ -89,7 +136,7 @@ class ShardVoteCache:
         X = jnp.asarray(X, jnp.float32)
         self._shards[key] = _Resident(
             X=X,
-            tally=scoring.init_tally(X.shape[0], self.spec.n_classes),
+            tally=self._empty_tally(X.shape[0]),
             fingerprint=fp,
         )
 
@@ -121,27 +168,37 @@ class ShardVoteCache:
             self.members_folded += new
         return np.asarray(self._argmax(shard.tally))
 
-    @staticmethod
-    def _alpha_prefix_crc(ensemble: boosting.Ensemble, count: int) -> int:
-        return zlib.crc32(np.ascontiguousarray(ensemble.alpha[:count]).tobytes())
+    def _alpha_prefix_crc(self, ensemble, counts: tuple) -> int:
+        """CRC of the used alpha prefix — per group, concatenated, for a
+        heterogeneous ensemble (an already-tallied member of ANY group
+        must never change under the cache)."""
+        if self.hetero:
+            return zlib.crc32(
+                b"".join(
+                    np.ascontiguousarray(np.asarray(e.alpha[:c])).tobytes()
+                    for e, c in zip(ensemble, counts)
+                )
+            )
+        return zlib.crc32(np.ascontiguousarray(ensemble.alpha[: counts[0]]).tobytes())
 
-    def update_ensemble(self, ensemble: boosting.Ensemble) -> None:
+    def update_ensemble(self, ensemble) -> None:
         """Swap in a grown ensemble; resident tallies refresh lazily on the
         next request, each folding only the appended members."""
-        count = int(ensemble.count)
-        if count < self._count:
+        counts = self._group_counts(ensemble)
+        if any(c < c0 for c, c0 in zip(counts, self._counts)):
             raise ValueError("ensemble shrank; serving caches only grow")
         # resident tallies hold votes of members [0, counted): replacing an
         # already-tallied member would silently serve the old model forever,
         # so reject anything that is not a pure append
-        if self._alpha_prefix_crc(ensemble, self._count) != self._alpha_crc:
+        if self._alpha_prefix_crc(ensemble, self._counts) != self._alpha_crc:
             raise ValueError(
                 "already-tallied ensemble members changed; serving caches are "
                 "append-only — build a new ShardVoteCache for a retrained model"
             )
         self.ensemble = ensemble
-        self._count = count
-        self._alpha_crc = self._alpha_prefix_crc(ensemble, count)
+        self._counts = counts
+        self._count = self._used_count(ensemble)
+        self._alpha_crc = self._alpha_prefix_crc(ensemble, counts)
 
     def stats(self) -> Dict[str, Any]:
         return {

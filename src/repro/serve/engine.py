@@ -46,7 +46,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import boosting, scoring
+from repro.core import boosting, hetero, scoring
+from repro.core.hetero import HeterogeneousSpec
 from repro.kernels import ops
 from repro.learners.base import LearnerSpec, WeakLearner
 from repro.serve.artifact import ensemble_signature
@@ -96,15 +97,18 @@ class EngineStats:
 class ServeEngine:
     def __init__(
         self,
-        learner: WeakLearner,
-        spec: LearnerSpec,
-        ensemble: boosting.Ensemble,
+        learner: Optional[WeakLearner],
+        spec: LearnerSpec | HeterogeneousSpec,
+        ensemble: Any,
         *,
         batch_size: Optional[int] = None,
         committee: Optional[bool] = None,
         use_pallas: Optional[bool] = None,
         config: Optional[EngineConfig] = None,
     ):
+        """Homogeneous: ``(learner, LearnerSpec, Ensemble)``.
+        Heterogeneous: ``(None, HeterogeneousSpec, per-group tuple)`` —
+        one engine serves the whole mixture (see ``from_artifact``)."""
         if config is None:
             config = EngineConfig(
                 batch_size=256 if batch_size is None else int(batch_size),
@@ -119,6 +123,19 @@ class ServeEngine:
                 "not alongside it"
             )
         self.config = config
+        self.hetero = isinstance(spec, HeterogeneousSpec)
+        if self.hetero:
+            if learner is not None:
+                raise ValueError(
+                    "heterogeneous engines resolve per-group learners from the "
+                    "HeterogeneousSpec; pass learner=None"
+                )
+            if config.mesh is not None:
+                raise ValueError(
+                    "mesh-backed serving is homogeneous-only: the batch-sharded "
+                    "predict runs one program per shard (fl/sharded.py)"
+                )
+            hetero.resolve(spec)  # fail fast on unknown registry keys
         self.learner = learner
         self.spec = spec
         self.ensemble = ensemble
@@ -148,8 +165,43 @@ class ServeEngine:
         # stay here, so a long-lived engine must pop what it reads
         self.results: Dict[int, int] = {}
 
-    # -- the one jitted predict per (learner, B) ---------------------------
+    @classmethod
+    def from_artifact(
+        cls,
+        art,  # artifact.LoadedArtifact
+        *,
+        batch_size: Optional[int] = None,
+        use_pallas: Optional[bool] = None,
+        config: Optional[EngineConfig] = None,
+    ) -> "ServeEngine":
+        """Build the right engine (homogeneous or heterogeneous) for a
+        loaded artifact — the one serving entry point that works for
+        every artifact flavour."""
+        if config is not None:
+            if batch_size is not None or use_pallas is not None:
+                # same rule as the constructor: silently preferring one
+                # source would serve under knobs the caller never asked for
+                raise ValueError(
+                    "pass batch_size/use_pallas inside the EngineConfig, "
+                    "not alongside it"
+                )
+            if config.committee != art.committee:
+                raise ValueError(
+                    f"config.committee={config.committee} contradicts the "
+                    f"artifact (committee={art.committee})"
+                )
+            return cls(art.learner, art.spec, art.ensemble, config=config)
+        return cls(
+            art.learner, art.spec, art.ensemble,
+            batch_size=batch_size, committee=art.committee, use_pallas=use_pallas,
+        )
+
+    # -- the one jitted predict per (learner mix, B) -----------------------
     def _fn(self, B: int) -> Callable:
+        """The jitted ``(ensemble, Xb) -> [B] i32`` program for one batch
+        size.  All backends — local homogeneous, mesh-sharded, and the
+        heterogeneous per-group mix — end in ONE ``vote_argmax``
+        reduction over the stacked member votes."""
         if B not in self._fns:
             learner, spec, committee = self.learner, self.spec, self.committee
             use_pallas = self.use_pallas
@@ -158,20 +210,64 @@ class ServeEngine:
                 # program, shard_map'd over the mesh's federation axes
                 from repro.fl.sharded import make_batch_predict
 
-                self._fns[B] = make_batch_predict(
+                sharded = make_batch_predict(
                     learner, spec, self.config.mesh,
                     committee=committee, use_pallas=use_pallas,
                 )
+                self._fns[B] = lambda ens, Xb: sharded(
+                    ens.params, ens.alpha, ens.count, Xb
+                )
+            elif self.hetero:
+                # per-learner-group member predicts (committees fold the
+                # cross-group seat tally per member first), concatenated
+                # into one [sum_g T, B] vote stack for a single
+                # vote_argmax reduction
+                learners = hetero.resolve(spec)
+
+                def batch_predict(ens, Xb):
+                    if committee:
+                        T = ens[0].alpha.shape[0]
+
+                        def member(t):
+                            tally = hetero._committee_tally(
+                                learners, spec,
+                                [scoring._take_slot(e.params, t) for e in ens], Xb,
+                            )
+                            return jnp.argmax(tally, axis=-1).astype(jnp.int32)
+
+                        preds = jax.vmap(member)(jnp.arange(T))  # [T, B]
+                        used = (
+                            jnp.arange(T) < ens[0].count
+                        ).astype(jnp.float32) * ens[0].alpha
+                    else:
+                        parts, useds = [], []
+                        for g, (lrn, sp) in enumerate(zip(learners, spec.specs)):
+                            T = ens[g].alpha.shape[0]
+                            member = lambda t, g=g, lrn=lrn, sp=sp: scoring.member_prediction(
+                                lrn, sp, scoring._take_slot(ens[g].params, t), Xb,
+                            )
+                            parts.append(jax.vmap(member)(jnp.arange(T)))  # [T, B]
+                            useds.append(
+                                (jnp.arange(T) < ens[g].count).astype(jnp.float32)
+                                * ens[g].alpha
+                            )
+                        preds = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+                        used = useds[0] if len(useds) == 1 else jnp.concatenate(useds)
+                    return ops.vote_argmax(
+                        preds, used, n_classes=spec.n_classes, use_pallas=use_pallas
+                    )
+
+                self._fns[B] = jax.jit(batch_predict)
             else:
 
-                def batch_predict(params, alpha, count, Xb):
-                    T = alpha.shape[0]
+                def batch_predict(ens, Xb):
+                    T = ens.alpha.shape[0]
                     member = lambda t: scoring.member_prediction(
-                        learner, spec, scoring._take_slot(params, t), Xb,
+                        learner, spec, scoring._take_slot(ens.params, t), Xb,
                         committee=committee,
                     )
                     preds = jax.vmap(member)(jnp.arange(T))  # [T, B]
-                    used = (jnp.arange(T) < count).astype(jnp.float32) * alpha
+                    used = (jnp.arange(T) < ens.count).astype(jnp.float32) * ens.alpha
                     return ops.vote_argmax(
                         preds, used, n_classes=spec.n_classes, use_pallas=use_pallas
                     )
@@ -183,15 +279,13 @@ class ServeEngine:
     def warmup(self) -> None:
         """Pre-compile the steady-state batch shape."""
         X = jnp.zeros((self.batch_size, self.spec.n_features), jnp.float32)
-        ens = self.ensemble
-        jax.block_until_ready(self._fn(self.batch_size)(ens.params, ens.alpha, ens.count, X))
+        jax.block_until_ready(self._fn(self.batch_size)(self.ensemble, X))
 
     def _run_batch(self, Xb: jax.Array, n_valid: int) -> np.ndarray:
         """One static [B, d] batch; returns the n_valid un-padded answers."""
         B = Xb.shape[0]
-        ens = self.ensemble
         t0 = time.perf_counter()
-        out = self._fn(B)(ens.params, ens.alpha, ens.count, Xb)
+        out = self._fn(B)(self.ensemble, Xb)
         out = np.asarray(out)  # device sync = response ready
         self.stats.batch_seconds.append(time.perf_counter() - t0)
         self.stats.batches += 1

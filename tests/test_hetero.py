@@ -1,0 +1,366 @@
+"""Heterogeneous-learner federations (core/hetero.py): spec validation,
+single-group bit-for-bit equivalence with the homogeneous path for every
+fused algorithm, mixed-ensemble artifact round-trips (including the full
+registry mix and committees), mixed serving parity against the grouped
+strong predict, append-only cache growth, the plan plumbing, and the
+dirichlet empty-shard regression."""
+import dataclasses
+import json
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import boosting, hetero
+from repro.core.hetero import HeterogeneousSpec
+from repro.core.plan import LearnerPlan, adaboost_plan, bagging_plan, plan_from_dict, plan_to_dict
+from repro.fl.federation import Federation
+from repro.fl.partition import dirichlet_partition, iid_partition
+from repro.learners import LearnerSpec, available_learners, get_learner
+from repro.serve import ServeEngine, ShardVoteCache, load_artifact, save_artifact
+
+HPARAMS = {
+    "decision_tree": {"depth": 3, "n_bins": 8},
+    "extra_tree": {"depth": 3, "n_bins": 8, "max_candidates": 16},
+    "ridge": {"l2": 1.0},
+    "mlp": {"hidden": 16, "steps": 30, "lr": 0.05},
+    "gaussian_nb": {},
+    "nearest_centroid": {},
+}
+
+C, D, K, N = 6, 6, 3, 240
+
+
+def _blobs(key, n=N, d=D, sep=3.0):
+    kc, kx, ky = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (K, d)) * sep
+    y = jax.random.randint(ky, (n,), 0, K)
+    return centers[y] + jax.random.normal(kx, (n, d)), y
+
+
+@pytest.fixture(scope="module")
+def data():
+    key = jax.random.PRNGKey(0)
+    k1, k3 = jax.random.split(key)
+    X, y = _blobs(k1, n=N + 120)  # ONE center draw, then train/test split
+    Xtr, ytr, Xte, yte = X[:N], y[:N], X[N:], y[N:]
+    Xs, ys, masks = iid_partition(Xtr, ytr, C, k3)
+    return Xs, ys, masks, Xte, yte
+
+
+def _hspec(names, n_collab=C):
+    return HeterogeneousSpec.cycle(
+        names, n_collab, D, K, hparams={n: HPARAMS[n] for n in names}
+    )
+
+
+def _train_mixed(names, key, rounds=4, data=None):
+    Xs, ys, masks, _, _ = data
+    hs = _hspec(names)
+    state = hetero.init_hetero_boost_state(hs, rounds, masks, key, X=Xs)
+    rfn = jax.jit(lambda s: hetero.hetero_adaboost_f_round(hs, s, Xs, ys, masks))
+    for _ in range(rounds):
+        state, _ = rfn(state)
+    return hs, state.ensemble
+
+
+# ---------------------------------------------------------------------------
+# Spec validation
+# ---------------------------------------------------------------------------
+
+
+def test_cycle_dedups_identical_groups():
+    hs = _hspec(["decision_tree", "ridge", "decision_tree"])
+    assert hs.n_groups == 2  # the two tree entries collapse into one group
+    assert hs.names == ("decision_tree", "ridge")
+    assert hs.assignment == (0, 1, 0, 0, 1, 0)
+    assert hs.members(0) == (0, 2, 3, 5)
+
+
+def test_spec_rejects_bad_geometry_and_orphan_groups():
+    a = LearnerSpec("ridge", 4, 3)
+    b = LearnerSpec("gaussian_nb", 5, 3)  # different n_features
+    with pytest.raises(ValueError, match="problem geometry"):
+        HeterogeneousSpec(specs=(a, b), assignment=(0, 1))
+    c = LearnerSpec("gaussian_nb", 4, 3)
+    with pytest.raises(ValueError, match="no collaborators"):
+        HeterogeneousSpec(specs=(a, c), assignment=(0, 0))
+    with pytest.raises(ValueError, match="unknown groups"):
+        HeterogeneousSpec(specs=(a,), assignment=(0, 1))
+
+
+def test_federation_rejects_unknown_registry_key(data):
+    Xs, ys, masks, Xte, yte = data
+    hs = HeterogeneousSpec(
+        specs=(LearnerSpec("no_such_learner", D, K),), assignment=(0,) * C
+    )
+    with pytest.raises(KeyError, match="no_such_learner"):
+        Federation(adaboost_plan(rounds=2), Xs, ys, masks, Xte, yte, hs,
+                   jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Single-group == homogeneous, bit for bit (the acceptance regression)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algorithm", ["adaboost_f", "distboost_f", "preweak_f", "bagging"])
+def test_single_group_bitforbit(algorithm, data):
+    Xs, ys, masks, Xte, yte = data
+    rounds = 3
+    plan = (
+        bagging_plan(rounds=rounds)
+        if algorithm == "bagging"
+        else adaboost_plan(rounds=rounds, algorithm=algorithm)
+    )
+    key = jax.random.PRNGKey(7)
+    lspec = LearnerSpec("decision_tree", D, K, HPARAMS["decision_tree"])
+    hspec = _hspec(["decision_tree"])
+    assert hspec.n_groups == 1
+
+    fed_hom = Federation(plan, Xs, ys, masks, Xte, yte, lspec, key)
+    hist_hom = fed_hom.run(eval_every=1)
+    fed_het = Federation(plan, Xs, ys, masks, Xte, yte, hspec, key)
+    hist_het = fed_het.run(eval_every=1)
+
+    assert hist_hom == hist_het  # f1/epsilon/alpha/chosen, float-exact
+    np.testing.assert_array_equal(
+        np.asarray(fed_hom._fused_state.weights),
+        np.asarray(fed_het._fused_state.weights),
+    )
+    ens_hom = fed_hom._fused_state.ensemble
+    (ens_het,) = fed_het._fused_state.ensemble  # single group
+    np.testing.assert_array_equal(np.asarray(ens_hom.alpha), np.asarray(ens_het.alpha))
+    assert int(ens_hom.count) == int(ens_het.count)
+    for a, b in zip(jax.tree.leaves(ens_hom.params), jax.tree.leaves(ens_het.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_single_group_serving_bitforbit(data):
+    Xs, ys, masks, Xte, yte = data
+    key = jax.random.PRNGKey(3)
+    hs, hens = _train_mixed(["decision_tree"], key, rounds=3, data=data)
+    lspec = LearnerSpec("decision_tree", D, K, HPARAMS["decision_tree"])
+    learner = get_learner("decision_tree")
+    # the single-group tuple holds exactly the homogeneous ensemble
+    hom = ServeEngine(learner, lspec, hens[0], batch_size=32).predict(np.asarray(Xte))
+    het = ServeEngine(None, hs, hens, batch_size=32).predict(np.asarray(Xte))
+    np.testing.assert_array_equal(hom, het)
+
+
+# ---------------------------------------------------------------------------
+# Mixed training: counts, learning signal
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_round_appends_exactly_one_member_per_round(data):
+    names = ["decision_tree", "ridge", "gaussian_nb"]
+    hs, hens = _train_mixed(names, jax.random.PRNGKey(1), rounds=5, data=data)
+    counts = [int(e.count) for e in hens]
+    assert sum(counts) == 5  # one winner per round, spread over the groups
+    assert hetero.hetero_count(hens) == 5
+
+
+def test_mixed_federation_learns(data):
+    Xs, ys, masks, Xte, yte = data
+    hs = _hspec(["decision_tree", "ridge", "gaussian_nb"])
+    fed = Federation(adaboost_plan(rounds=6), Xs, ys, masks, Xte, yte, hs,
+                     jax.random.PRNGKey(2))
+    hist = fed.run(eval_every=1)
+    assert hist[-1]["f1"] > 0.8, hist[-1]
+
+
+# ---------------------------------------------------------------------------
+# Artifact round-trip for learner mixes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "names",
+    [
+        ["decision_tree", "ridge"],
+        ["gaussian_nb", "nearest_centroid", "mlp"],
+        sorted(HPARAMS),  # every registered learner in ONE federation
+    ],
+    ids=["pair", "triple", "full-registry"],
+)
+def test_hetero_artifact_roundtrip(names, tmp_path, data):
+    assert set(names) <= set(available_learners())
+    Xs, ys, masks, Xte, _ = data
+    hs, hens = _train_mixed(names, jax.random.PRNGKey(4), rounds=3, data=data)
+    path = tmp_path / "mix.mafl"
+    save_artifact(path, hs, hens, extra={"note": "test"})
+    art = load_artifact(path)
+    assert art.hetero and art.learner is None
+    assert art.manifest["learner"] == "heterogeneous"
+    assert art.manifest["format_version"] == 2
+    assert art.spec == hs
+    counts = [int(e.count) for e in hens]
+    want_members = [
+        hs.specs[g].name for g in range(hs.n_groups) for _ in range(counts[g])
+    ]
+    assert art.manifest["member_learners"] == want_members
+    assert art.manifest["ensemble_count"] == sum(counts)
+    for a, b in zip(jax.tree.leaves(hens), jax.tree.leaves(art.ensemble)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(
+        np.asarray(hetero.hetero_strong_predict(hs, hens, Xte)),
+        np.asarray(hetero.hetero_strong_predict(art.spec, art.ensemble, Xte)),
+    )
+
+
+def test_hetero_committee_artifact_roundtrip(tmp_path, data):
+    Xs, ys, masks, Xte, _ = data
+    hs = _hspec(["ridge", "gaussian_nb"])
+    state = hetero.init_hetero_boost_state(
+        hs, 3, masks, jax.random.PRNGKey(5), committee=True, X=Xs
+    )
+    rfn = jax.jit(lambda s: hetero.hetero_distboost_f_round(hs, s, Xs, ys, masks))
+    for _ in range(3):
+        state, _ = rfn(state)
+    path = tmp_path / "committee.mafl"
+    save_artifact(path, hs, state.ensemble, committee_size=C)
+    art = load_artifact(path)
+    assert art.committee and art.committee_size == C
+    # every member is one mixed committee: one seat name per collaborator
+    seat_names = [hs.specs[g].name for g in hs.assignment]
+    assert art.manifest["member_learners"] == [seat_names] * 3
+    np.testing.assert_array_equal(
+        np.asarray(hetero.hetero_strong_predict(hs, state.ensemble, Xte, committee=True)),
+        np.asarray(
+            hetero.hetero_strong_predict(art.spec, art.ensemble, Xte, committee=True)
+        ),
+    )
+    # a wrong committee_size must be rejected at save time
+    with pytest.raises(ValueError, match="committee_size"):
+        save_artifact(tmp_path / "bad.mafl", hs, state.ensemble, committee_size=C + 1)
+
+
+def test_load_rejects_unknown_member_learner(tmp_path, data):
+    hs, hens = _train_mixed(["decision_tree", "ridge"], jax.random.PRNGKey(6),
+                            rounds=2, data=data)
+    path = tmp_path / "mix.mafl"
+    save_artifact(path, hs, hens)
+    raw = path.read_bytes()
+    (mlen,) = struct.unpack("<I", raw[8:12])
+    manifest = json.loads(raw[12 : 12 + mlen])
+    manifest["groups"][1]["learner"] = "definitely_not_registered"
+    blob = json.dumps(manifest, sort_keys=True).encode()
+    bad = tmp_path / "bad.mafl"
+    bad.write_bytes(raw[:8] + struct.pack("<I", len(blob)) + blob + raw[12 + mlen :])
+    with pytest.raises(ValueError, match="unknown learner key"):
+        load_artifact(bad)
+
+
+# ---------------------------------------------------------------------------
+# Mixed serving: engine + cache vs the grouped strong predict
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_engine_bitforbit_vs_grouped_strong_predict(data):
+    _, _, _, Xte, _ = data
+    hs, hens = _train_mixed(
+        ["decision_tree", "ridge", "gaussian_nb"], jax.random.PRNGKey(8),
+        rounds=4, data=data,
+    )
+    want = np.asarray(hetero.hetero_strong_predict(hs, hens, Xte))
+    engine = ServeEngine(None, hs, hens, batch_size=32)  # ragged tail: 120 % 32
+    engine.warmup()
+    np.testing.assert_array_equal(engine.predict(np.asarray(Xte)), want)
+    assert engine.stats.compiles == 1
+    cache = ShardVoteCache(None, hs, hens)
+    np.testing.assert_array_equal(cache.predict("test", Xte), want)
+    np.testing.assert_array_equal(cache.predict("test"), want)  # pure hit
+    stats = cache.stats()
+    assert stats["hits"] == 1 and stats["members_folded"] == hetero.hetero_count(hens)
+
+
+def test_mixed_cache_grows_append_only(data):
+    Xs, ys, masks, Xte, _ = data
+    hs = _hspec(["decision_tree", "ridge", "gaussian_nb"])
+    state = hetero.init_hetero_boost_state(hs, 5, masks, jax.random.PRNGKey(9), X=Xs)
+    rfn = jax.jit(lambda s: hetero.hetero_adaboost_f_round(hs, s, Xs, ys, masks))
+    snaps = []
+    for _ in range(5):
+        state, _ = rfn(state)
+        snaps.append(state.ensemble)
+    cache = ShardVoteCache(None, hs, snaps[2])
+    cache.predict("s", Xte)
+    cache.update_ensemble(snaps[4])  # pure append: +2 members
+    np.testing.assert_array_equal(
+        cache.predict("s"),
+        np.asarray(hetero.hetero_strong_predict(hs, snaps[4], Xte)),
+    )
+    assert cache.stats()["members_folded"] == 5
+    with pytest.raises(ValueError, match="only grow"):
+        cache.update_ensemble(snaps[1])
+
+
+def test_mixed_engine_update_rejects_foreign_structure(data):
+    hs3, hens3 = _train_mixed(
+        ["decision_tree", "ridge", "gaussian_nb"], jax.random.PRNGKey(10),
+        rounds=3, data=data,
+    )
+    hs2, hens2 = _train_mixed(["decision_tree", "ridge"], jax.random.PRNGKey(10),
+                              rounds=3, data=data)
+    engine = ServeEngine(None, hs3, hens3, batch_size=32)
+    with pytest.raises(ValueError, match="structure"):
+        engine.update_ensemble(hens2)
+
+
+# ---------------------------------------------------------------------------
+# Plan plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_plan_learners_roundtrip_and_validation(data):
+    plan = dataclasses.replace(
+        adaboost_plan(rounds=2),
+        learners=(LearnerPlan("decision_tree", {"depth": 3}), LearnerPlan("ridge")),
+    ).validate()
+    back = plan_from_dict(plan_to_dict(plan))
+    assert back.learners == plan.learners
+    with pytest.raises(ValueError, match="fedavg"):
+        dataclasses.replace(plan, algorithm="fedavg", tasks=[]).validate()
+
+    Xs, ys, masks, Xte, yte = data
+    fed = Federation(plan, Xs, ys, masks, Xte, yte, LearnerSpec("ignored", D, K),
+                     jax.random.PRNGKey(0))
+    assert fed.hetero and fed.spec.names == ("decision_tree", "ridge")
+    assert fed.spec.assignment == (0, 1, 0, 1, 0, 1)
+
+
+def test_hetero_requires_fused_path(data):
+    Xs, ys, masks, Xte, yte = data
+    plan = adaboost_plan(rounds=2)
+    plan = dataclasses.replace(
+        plan, optimizations=dataclasses.replace(plan.optimizations, fused_round=False)
+    )
+    hs = _hspec(["decision_tree", "ridge"])
+    fed = Federation(plan, Xs, ys, masks, Xte, yte, hs, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="fused"):
+        fed.run()
+
+
+# ---------------------------------------------------------------------------
+# Dirichlet empty-shard regression (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_dirichlet_small_alpha_never_empty(seed):
+    key = jax.random.PRNGKey(seed)
+    X, y = _blobs(key, n=300)
+    Xs, ys, mask = dirichlet_partition(X, y, 8, key, alpha=0.05, n_classes=K)
+    per = np.asarray(mask).sum(axis=1)
+    assert per.min() >= 1, per  # no collaborator may reach the fit path empty
+    assert int(per.sum()) == 300  # and no sample is lost by the guard
+
+
+def test_dirichlet_rejects_more_collaborators_than_samples():
+    key = jax.random.PRNGKey(0)
+    X, y = _blobs(key, n=4)
+    with pytest.raises(ValueError, match="cannot give each"):
+        dirichlet_partition(X, y, 8, key, alpha=0.5, n_classes=K)
