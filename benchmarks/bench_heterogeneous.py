@@ -101,6 +101,11 @@ def main(quick: bool = False) -> None:
         for _ in range(reps):
             engine.predict(Xte_np)
         dt = (time.perf_counter() - t0) / reps
+        # count-aware masking: groups with used == 0 members contribute
+        # an exact +0.0 to the tally, so the engine skips their predicts
+        # outright — boosting often concentrates every winner in one
+        # family, leaving the other groups as pure dead weight
+        group_members = [int(e.count) for e in hens]
         rep.add(
             "serve/mix3_engine",
             us_per_call=dt / n * 1e6,
@@ -109,6 +114,25 @@ def main(quick: bool = False) -> None:
             save_load_ms=round(rt * 1e3, 2),
             member_keys=json_safe(counts),
             members=art.manifest["ensemble_count"],
+            group_members=group_members,
+            active_groups=sum(c > 0 for c in group_members),
+        )
+
+        # the masking ablation: force every group active (the pre-masking
+        # behaviour — empty groups still predict their full slot buffer)
+        unmasked = ServeEngine.from_artifact(art, batch_size=256)
+        unmasked._active = (True,) * len(hens)
+        unmasked.warmup()
+        np.testing.assert_array_equal(unmasked.predict(Xte_np), want)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            unmasked.predict(Xte_np)
+        dt_u = (time.perf_counter() - t0) / reps
+        rep.add(
+            "serve/mix3_engine_unmasked",
+            us_per_call=dt_u / n * 1e6,
+            req_per_s=round(n / dt_u),
+            masking_speedup=round(dt_u / dt, 2),
         )
 
     # homogeneous reference engine at the same capacity

@@ -21,6 +21,20 @@ deadline scheduler decouples producer from dispatcher, so a burst
 queues behind the single dispatch thread (open loop) and p50/p99 read
 higher at the same req/s.
 
+Fleet-scale sections (also runnable alone via ``--multitenant-only``,
+the CI multitenant-smoke configuration):
+
+  * quantized artifacts: every registered learner saved f32 vs bf16 vs
+    int8 (calibrated), size ratios reported, votes asserted
+    bit-identical — the artifact diet must not flip a single argmax;
+  * multi-tenant compile sharing: N tenants of identical structure
+    behind one ``ModelRegistry`` — tenants 2..N must be compile-free
+    (process-wide cache hit rate reported);
+  * open-loop multi-producer load: ≥4 tenants, one producer thread
+    each, all submitting through their own ``DeadlineScheduler``
+    concurrently — aggregate throughput and p50/p99 under contention
+    vs the single-producer rows above.
+
 The serve path is asserted bit-for-bit equal to
 ``boosting.strong_predict`` before anything is timed — a benchmark of a
 wrong answer is worthless.  Writes ``BENCH_serve.json`` at the repo root
@@ -29,7 +43,9 @@ wrong answer is worthless.  Writes ``BENCH_serve.json`` at the repo root
 from __future__ import annotations
 
 import argparse
+import contextlib
 import tempfile
+import threading
 import time
 from pathlib import Path
 
@@ -41,13 +57,34 @@ from repro.core import boosting
 from repro.core.metrics import f1_macro
 from repro.data import get_dataset
 from repro.fl.partition import iid_partition
-from repro.learners import LearnerSpec, get_learner
-from repro.serve import ServeEngine, ShardVoteCache, load_artifact, save_artifact
+from repro.learners import LearnerSpec, available_learners, get_learner
+from repro.serve import (
+    EngineConfig,
+    ModelRegistry,
+    ServeEngine,
+    ShardVoteCache,
+    load_artifact,
+    publish_artifact,
+    save_artifact,
+)
+from repro.serve.compile_cache import cache_stats, clear_cache
 
 LEARNERS = {
     "decision_tree": {"depth": 4, "n_bins": 16},
     "ridge": {"l2": 1.0},
     "gaussian_nb": {},
+}
+
+# serving-scale hparams for the quantization sweep — must cover the
+# whole registry (asserted) so "bit-identical on every learner" means
+# every learner
+QUANT_HPARAMS = {
+    "decision_tree": {"depth": 4, "n_bins": 16},
+    "extra_tree": {"depth": 4, "n_bins": 16, "max_candidates": 16},
+    "ridge": {"l2": 1.0},
+    "mlp": {"hidden": 16, "steps": 30, "lr": 0.05},
+    "gaussian_nb": {},
+    "nearest_centroid": {},
 }
 
 
@@ -63,7 +100,167 @@ def _setup(name, hp, capacity, dspec, Xtr, ytr, key):
     return learner, lspec, state, rfn
 
 
-def main(quick: bool = False) -> None:
+def bench_quantized(rep, quick, dspec, Xtr, ytr, Xte) -> None:
+    """f32 vs bf16 vs int8 artifact size — votes bit-identical, every
+    registered learner.  Ensembles come from real AdaBoost.F rounds:
+    boosted members have decorrelated decision boundaries, so a member
+    vote flipped by quantization rarely moves the alpha-weighted argmax
+    (near-identical members would flip together)."""
+    assert set(QUANT_HPARAMS) == set(available_learners())
+    T = 4 if quick else 20
+    ncal = 256 if quick else 512  # deployment-style held-out sample
+    Xte_np = np.asarray(Xte, np.float32)
+    cal = Xte_np[:ncal]
+    for name in sorted(QUANT_HPARAMS):
+        learner, spec, state, rfn = _setup(
+            name, QUANT_HPARAMS[name], T, dspec, Xtr, ytr, jax.random.PRNGKey(7)
+        )
+        for _ in range(T):
+            state, _ = rfn(state)
+        jax.block_until_ready(state.weights)
+        ens = state.ensemble
+        want = np.asarray(boosting.strong_predict(learner, spec, ens, Xte))
+        td = Path(tempfile.mkdtemp())
+        sizes, agree = {}, {}
+        tree_family = name in ("decision_tree", "extra_tree")
+        for mode in (None, "bf16", "int8"):
+            tag = mode or "f32"
+            path = save_artifact(
+                td / f"{name}.{tag}.mafl", spec, ens,
+                quantize=mode, calibrate=None if mode is None else cal,
+            )
+            sizes[tag] = path.stat().st_size
+            art = load_artifact(path)
+            got = np.asarray(
+                boosting.strong_predict(art.learner, art.spec, art.ensemble, Xte)
+            )
+            # the guarantee: bit-identical votes on the calibration rows
+            # (tree-family leaves carry argmax repair, so trees must be
+            # exact on EVERY input, not just the calibrated ones)
+            np.testing.assert_array_equal(got[:ncal], want[:ncal])
+            if tree_family:
+                np.testing.assert_array_equal(got, want)
+            agree[tag] = float((got == want).mean())
+        rep.add(
+            f"{name}/quantized",
+            members=T,
+            f32_bytes=sizes["f32"],
+            bf16_bytes=sizes["bf16"],
+            int8_bytes=sizes["int8"],
+            bf16_x_smaller=round(sizes["f32"] / sizes["bf16"], 2),
+            int8_x_smaller=round(sizes["f32"] / sizes["int8"], 2),
+            calibration_rows=ncal,
+            votes_bit_identical_on_calibration=True,
+            exact_for_all_inputs=tree_family,
+            full_test_vote_agreement_int8=round(agree["int8"], 4),
+        )
+
+
+def _tenant_fleet(n_tenants, spec, ensemble, batch):
+    """Publish one checkpoint to n tenant dirs, register them all."""
+    pub = Path(tempfile.mkdtemp(prefix="bench_fleet_"))
+    for i in range(n_tenants):
+        publish_artifact(pub / f"fed{i}", spec, ensemble, version=1)
+    reg = ModelRegistry(config=EngineConfig(batch_size=batch))
+    for i in range(n_tenants):
+        reg.add_tenant(f"fed{i}", pub / f"fed{i}")
+    return reg
+
+
+def bench_multitenant(rep, learner, spec, ensemble, Xte_np, want, batch) -> None:
+    """N structurally identical tenants: one compile, N-1 warm borrows."""
+    n_tenants = 4
+    clear_cache()
+    reg = _tenant_fleet(n_tenants, spec, ensemble, batch)
+    first_ms = []
+    for i in range(n_tenants):
+        t0 = time.perf_counter()
+        got = reg.predict(f"fed{i}", Xte_np)
+        first_ms.append((time.perf_counter() - t0) * 1e3)
+        np.testing.assert_array_equal(got, want)
+    per = reg.stats()["tenants"]
+    stats = cache_stats()
+    assert sum(t["compiles"] for t in per.values()) == 1, per
+    assert sum(t["cache_hits"] for t in per.values()) == n_tenants - 1, per
+    rep.add(
+        "multitenant/compile_sharing",
+        tenants=n_tenants,
+        compiles=1,
+        cache_hits=n_tenants - 1,
+        hit_rate=round(stats["hit_rate"], 3),
+        programs=stats["programs"],
+        cold_first_predict_ms=round(first_ms[0], 2),
+        warm_first_predict_ms=round(min(first_ms[1:]), 2),
+        batch=batch,
+    )
+
+
+def bench_open_loop(rep, learner, spec, ensemble, Xte_np, want, batch) -> None:
+    """≥4 tenants, one open-loop producer each, all dispatch threads
+    live at once — throughput + tail latency under contention, next to
+    an identically shaped single-producer reference."""
+    n_tenants = 4
+    t_max_s = 0.002
+    n = Xte_np.shape[0]
+
+    def run(producers):
+        engines = [
+            ServeEngine(learner, spec, ensemble, batch_size=batch)
+            for _ in range(producers)
+        ]
+        for e in engines:
+            e.warmup()
+        outs = [None] * producers
+        errs = []
+
+        def producer(i, sched):
+            try:
+                ids = []
+                for j in range(0, n, 37):  # ragged request stream
+                    ids.extend(sched.submit(Xte_np[j : j + 37]))
+                outs[i] = sched.results(ids, timeout_s=600.0)
+            except Exception as e:  # pragma: no cover - surfaced below
+                errs.append(e)
+
+        with contextlib.ExitStack() as stack:
+            scheds = [
+                stack.enter_context(e.scheduler(t_max_s=t_max_s)) for e in engines
+            ]
+            threads = [
+                threading.Thread(target=producer, args=(i, s))
+                for i, s in enumerate(scheds)
+            ]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            dt = time.perf_counter() - t0
+        if errs:
+            raise errs[0]
+        for out in outs:
+            np.testing.assert_array_equal(out, want)
+        lat = np.concatenate([np.asarray(e.stats.request_latencies) for e in engines])
+        return producers * n / dt, lat
+
+    solo_rps, solo_lat = run(1)
+    rps, lat = run(n_tenants)
+    rep.add(
+        "multitenant/open_loop",
+        tenants=n_tenants,
+        producers=n_tenants,
+        req_per_s=round(rps),
+        p50_ms=round(float(np.percentile(lat, 50)) * 1e3, 3),
+        p99_ms=round(float(np.percentile(lat, 99)) * 1e3, 3),
+        single_producer_req_per_s=round(solo_rps),
+        single_producer_p50_ms=round(float(np.percentile(solo_lat, 50)) * 1e3, 3),
+        single_producer_p99_ms=round(float(np.percentile(solo_lat, 99)) * 1e3, 3),
+        t_max_ms=t_max_s * 1e3,
+        batch=batch,
+    )
+
+
+def main(quick: bool = False, multitenant_only: bool = False) -> None:
     rep = Reporter("serve")
     rounds = 4 if quick else 10
     grow = 2 if quick else 5  # extra members appended for the incremental stage
@@ -74,7 +271,7 @@ def main(quick: bool = False) -> None:
     dspec, (Xtr, ytr, Xte, yte) = get_dataset("pendigits", k1)
     Xte_np = np.asarray(Xte)
 
-    for name, hp in LEARNERS.items():
+    for name, hp in ({} if multitenant_only else LEARNERS).items():
         # capacity rounds+grow: the incremental stage appends `grow` later
         learner, lspec, state, rfn = _setup(
             name, hp, rounds + grow, dspec, Xtr, ytr, k2
@@ -197,10 +394,33 @@ def main(quick: bool = False) -> None:
             members_at_cold=rounds,
             members_folded_incremental=grow,
         )
-    rep.finish(baseline=not quick)  # quick runs must not rewrite the baseline
+
+    if not multitenant_only:
+        bench_quantized(rep, quick, dspec, Xtr, ytr, Xte)
+
+    # -- fleet-scale sections: many tenants, one process ------------------
+    learner, lspec, state, rfn = _setup(
+        "decision_tree", LEARNERS["decision_tree"], rounds, dspec, Xtr, ytr, k2
+    )
+    for _ in range(rounds):
+        state, _ = rfn(state)
+    jax.block_until_ready(state.weights)
+    fleet_want = np.asarray(
+        boosting.strong_predict(learner, lspec, state.ensemble, Xte)
+    )
+    bench_multitenant(rep, learner, lspec, state.ensemble, Xte_np, fleet_want, batch)
+    bench_open_loop(rep, learner, lspec, state.ensemble, Xte_np, fleet_want, batch)
+
+    # quick / multitenant-only runs must not rewrite the committed baseline
+    rep.finish(baseline=not quick and not multitenant_only)
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument(
+        "--multitenant-only",
+        action="store_true",
+        help="run only the fleet-scale sections (the CI multitenant-smoke job)",
+    )
     main(**vars(ap.parse_args()))

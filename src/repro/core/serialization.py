@@ -72,3 +72,200 @@ def roundtrip_equal(tree: Any, packed: bool = True) -> bool:
     back = deserialize(serialize(tree, packed), fmt, packed)
     ok = jax.tree.map(lambda a, b: bool(np.array_equal(np.asarray(a), np.asarray(b))), tree, back)
     return all(jax.tree.flatten(ok)[0])
+
+
+# ---------------------------------------------------------------------------
+# Quantized leaf codecs — the serving-artifact payload shrinkers
+# ---------------------------------------------------------------------------
+#
+# Ensemble outputs are argmax votes, so a serving artifact only has to
+# preserve the *decision function*, not the float values.  Each pytree
+# leaf carries its own codec (recorded per leaf in the artifact
+# manifest; see ``serve/artifact.py``):
+#
+#   raw   — exact bytes (always valid; the only codec for alpha/count).
+#   u8    — lossless uint8 downcast for integer leaves whose values fit
+#           [0, 255] (tree feature indices): 4x, bit-exact.
+#   bf16  — float32 -> bfloat16 truncation: 2x.
+#   int8  — per-slot affine uint8 grid over the leading (member-slot)
+#           axis, with three decision-preserving refinements:
+#             * outlier rows (axis -2 rows whose magnitude dwarfs the
+#               rest, e.g. a linear model's bias row) are stored raw so
+#               they do not inflate the quantization step;
+#             * per last-axis-row argmax repair: if rounding changed a
+#               row's (first-index) argmax, the original winner's code
+#               is bumped one step above the row max — for leaves whose
+#               last axis is the class axis (tree leaf logits) this
+#               makes every member vote EXACT for all inputs;
+#             * promoted slots (``promoted_slots``) are stored raw —
+#               the calibration escape hatch for members whose votes
+#               int8 cannot preserve.
+#
+# The int8 payload layout per leaf, sizes fully determined by
+# (shape, plan): uint8 codes for the full leaf, f32 scale[T], f32
+# low[T], f32 outlier rows [T, n_out, R], f32 promoted slots.
+
+CODEC_RAW = "raw"
+CODEC_U8 = "u8"
+CODEC_BF16 = "bf16"
+CODEC_INT8 = "int8"
+LEAF_CODECS = (CODEC_RAW, CODEC_U8, CODEC_BF16, CODEC_INT8)
+
+# int8 grid: 255 levels, one level of headroom for the argmax repair bump
+_INT8_LEVELS = 254
+# a row is an outlier when its absmax exceeds this multiple of the
+# median row absmax (per leaf) — it would stretch everyone's grid
+OUTLIER_ROW_RATIO = 4.0
+
+
+def outlier_rows(arr: Any) -> List[int]:
+    """Rows along axis -2 whose magnitude dwarfs the leaf's median row
+    (e.g. a linear model's bias row packed alongside its weights).
+    Quantizing them on the shared per-slot grid would stretch the grid
+    for every other row, so the int8 codec stores them raw."""
+    a = np.asarray(arr)
+    if a.ndim < 3:
+        return []  # axis -2 is the slot axis itself; nothing to single out
+    reduce_axes = tuple(i for i in range(a.ndim) if i != a.ndim - 2)
+    row_absmax = np.abs(a).max(axis=reduce_axes)
+    med = np.median(row_absmax)
+    if med == 0:
+        return []
+    return [int(i) for i in np.nonzero(row_absmax > OUTLIER_ROW_RATIO * med)[0]]
+
+
+def _int8_sections(plan: dict, shape, dtype) -> List[int]:
+    """Byte length of each int8 payload section, in layout order."""
+    size = int(np.prod(shape, dtype=np.int64))
+    T = shape[0]
+    R = shape[-1] if len(shape) >= 2 else 1
+    slot = size // T
+    n_out = len(plan.get("outlier_rows", ()))
+    n_promo = len(plan.get("promoted_slots", ()))
+    return [size, 4 * T, 4 * T, 4 * T * n_out * R, 4 * n_promo * slot]
+
+
+def encoded_nbytes(plan: dict, shape, dtype) -> int:
+    """Exact payload bytes of one encoded leaf — reader and writer derive
+    section offsets from (shape, plan) alone, no per-leaf framing."""
+    size = int(np.prod(shape, dtype=np.int64))
+    codec = plan["codec"]
+    if codec == CODEC_RAW:
+        return size * np.dtype(dtype).itemsize
+    if codec == CODEC_U8:
+        return size
+    if codec == CODEC_BF16:
+        return 2 * size
+    if codec == CODEC_INT8:
+        return sum(_int8_sections(plan, shape, dtype))
+    raise ValueError(f"unknown leaf codec {codec!r}; known: {LEAF_CODECS}")
+
+
+def _outlier_mask(shape, rows) -> np.ndarray:
+    mask = np.zeros(shape, bool)
+    if rows:
+        sl = [slice(None)] * len(shape)
+        sl[-2] = list(rows)
+        mask[tuple(sl)] = True
+    return mask
+
+
+def encode_leaf(arr: Any, plan: dict) -> bytes:
+    """One leaf -> payload bytes under ``plan`` (see module docstring)."""
+    a = np.ascontiguousarray(np.asarray(arr))
+    codec = plan["codec"]
+    if codec == CODEC_RAW:
+        return a.tobytes()
+    if codec == CODEC_U8:
+        if not np.issubdtype(a.dtype, np.integer):
+            raise ValueError(f"u8 codec needs an integer leaf, got {a.dtype}")
+        if a.size and (a.min() < 0 or a.max() > 255):
+            raise ValueError("u8 codec needs values in [0, 255]")
+        return a.astype(np.uint8).tobytes()
+    if not np.issubdtype(a.dtype, np.floating):
+        raise ValueError(f"{codec} codec needs a float leaf, got {a.dtype}")
+    if codec == CODEC_BF16:
+        import ml_dtypes
+
+        return a.astype(ml_dtypes.bfloat16).tobytes()
+    if codec != CODEC_INT8:
+        raise ValueError(f"unknown leaf codec {codec!r}; known: {LEAF_CODECS}")
+
+    a = a.astype(np.float32)
+    T = a.shape[0]
+    o_rows = list(plan.get("outlier_rows", ()))
+    promoted = sorted(plan.get("promoted_slots", ()))
+    out_mask = _outlier_mask(a.shape, o_rows)
+    kept = np.where(out_mask, np.nan, a).reshape(T, -1)
+    with np.errstate(all="ignore"):
+        lo = np.nanmin(kept, axis=1)
+        hi = np.nanmax(kept, axis=1)
+    lo = np.where(np.isfinite(lo), lo, 0.0).astype(np.float32)
+    hi = np.where(np.isfinite(hi), hi, 0.0).astype(np.float32)
+    scale = ((hi - lo) / _INT8_LEVELS).astype(np.float32)
+    scale = np.where(scale > 0, scale, 1.0).astype(np.float32)
+    code = np.clip(
+        np.rint((a.reshape(T, -1) - lo[:, None]) / scale[:, None]),
+        0, _INT8_LEVELS,
+    ).astype(np.uint8).reshape(a.shape)
+    if a.ndim >= 2:  # argmax repair per last-axis row
+        rows_c = code.reshape(-1, a.shape[-1])
+        rows_o = a.reshape(-1, a.shape[-1])
+        skip = out_mask.reshape(-1, a.shape[-1]).any(axis=1)
+        want = rows_o.argmax(axis=1)
+        bad = (rows_c.argmax(axis=1) != want) & ~skip
+        idx = np.arange(len(rows_c))
+        rows_c[idx, want] = np.where(
+            bad, rows_c.max(axis=1).astype(np.uint16) + 1, rows_c[idx, want]
+        ).astype(np.uint8)
+        code = rows_c.reshape(a.shape)
+    code = np.where(out_mask, 0, code).astype(np.uint8)
+    if promoted:
+        code[promoted] = 0  # dead codes; the raw section overrides
+    parts = [code.tobytes(), scale.tobytes(), lo.tobytes()]
+    if o_rows:
+        parts.append(np.ascontiguousarray(np.take(a, o_rows, axis=-2)).tobytes())
+    if promoted:
+        parts.append(np.ascontiguousarray(a[promoted]).tobytes())
+    return b"".join(parts)
+
+
+def decode_leaf(buf: bytes, plan: dict, shape, dtype) -> np.ndarray:
+    """Payload bytes -> leaf with the ORIGINAL shape/dtype (quantized
+    codecs dequantize; the pytree structure the engine compiles against
+    is identical to the f32 artifact's)."""
+    shape = tuple(shape)
+    codec = plan["codec"]
+    if codec == CODEC_RAW:
+        return np.frombuffer(buf, dtype=dtype).reshape(shape)
+    if codec == CODEC_U8:
+        return np.frombuffer(buf, dtype=np.uint8).astype(dtype).reshape(shape)
+    if codec == CODEC_BF16:
+        import ml_dtypes
+
+        return np.frombuffer(buf, dtype=ml_dtypes.bfloat16).astype(dtype).reshape(shape)
+    if codec != CODEC_INT8:
+        raise ValueError(f"unknown leaf codec {codec!r}; known: {LEAF_CODECS}")
+    sections = _int8_sections(plan, shape, dtype)
+    offs = np.cumsum([0] + sections)
+    if len(buf) != offs[-1]:
+        raise ValueError(f"int8 leaf payload is {len(buf)} bytes, expected {offs[-1]}")
+    cut = [bytes(buf[offs[i] : offs[i + 1]]) for i in range(len(sections))]
+    T = shape[0]
+    code = np.frombuffer(cut[0], dtype=np.uint8).reshape(shape)
+    scale = np.frombuffer(cut[1], dtype=np.float32)
+    lo = np.frombuffer(cut[2], dtype=np.float32)
+    a = (code.reshape(T, -1).astype(np.float32) * scale[:, None] + lo[:, None])
+    a = a.reshape(shape).astype(dtype)
+    o_rows = list(plan.get("outlier_rows", ()))
+    if o_rows:
+        R = shape[-1]
+        vals = np.frombuffer(cut[3], dtype=np.float32).reshape(T, len(o_rows), R)
+        sl = [slice(None)] * len(shape)
+        sl[-2] = list(o_rows)
+        a[tuple(sl)] = vals.reshape(a[tuple(sl)].shape).astype(dtype)
+    promoted = sorted(plan.get("promoted_slots", ()))
+    if promoted:
+        slot_shape = (len(promoted),) + shape[1:]
+        a[promoted] = np.frombuffer(cut[4], dtype=np.float32).reshape(slot_shape)
+    return a

@@ -195,7 +195,8 @@ def publish_and_consume(args, lspec, learner, Xtr, ytr, Xte, yte, key):
     final = load_artifact(fed.published[-1])
     assert cache.stats()["members_folded"] == int(final.manifest["ensemble_count"]), \
         cache.stats()
-    assert engine.stats.compiles == 1, "checkpoint swaps must not recompile"
+    assert engine.stats.compiles + engine.stats.cache_hits == 1, \
+        "checkpoint swaps must not need new predict programs"
     if final.hetero:
         want = np.asarray(
             hetero.hetero_strong_predict(
@@ -244,6 +245,10 @@ def main(argv=None):
     ap.add_argument("--t-max-ms", type=float, default=2.0,
                     help="deadline policy: max ms a partial batch may queue")
     ap.add_argument("--cache-repeats", type=int, default=10)
+    ap.add_argument("--quantize", choices=["bf16", "int8"], default=None,
+                    help="write the --artifact file with quantized leaf "
+                         "payloads, calibrated on the served split so its "
+                         "votes stay bit-identical to the f32 ensemble")
     ap.add_argument("--use-pallas", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -286,8 +291,15 @@ def main(argv=None):
         ensemble = train_ensemble(args, lspec, learner, Xtr, ytr, k2)
         if args.artifact:
             p = save_artifact(args.artifact, lspec, ensemble,
-                              extra={"dataset": args.dataset})
-            print(f"saved artifact {p} ({p.stat().st_size} bytes)")
+                              extra={"dataset": args.dataset},
+                              quantize=args.quantize,
+                              calibrate=np.asarray(Xte) if args.quantize else None)
+            print(f"saved artifact {p} ({p.stat().st_size} bytes"
+                  + (f", {args.quantize} leaves" if args.quantize else "") + ")")
+            if args.quantize:
+                # a quantized artifact must serve the same votes it was
+                # calibrated for — reload and serve the reloaded ensemble
+                ensemble = load_artifact(p).ensemble
 
     return serve(args, learner, lspec, ensemble, Xte, yte, committee=committee)
 

@@ -8,14 +8,20 @@ from the same artifact file and serve behind the same engine/cache APIs
 the right flavour):
 
   * ``artifact``  — save/load a deployable single-file artifact
-    (versioned manifest + the packed wire format of core/serialization),
-    plus the rolling checkpoint stream (``publish_artifact`` /
-    ``latest_artifact``) a still-training federation hands to serving;
+    (versioned manifest + the packed wire format of core/serialization,
+    optionally quantized: bf16/int8 per-leaf codecs with calibrated
+    vote-exactness), plus the rolling checkpoint stream
+    (``publish_artifact`` / ``latest_artifact``) a still-training
+    federation hands to serving;
   * ``engine``    — fixed-shape micro-batching request scheduler with a
-    warm per-batch-size compile cache and a Pallas ``vote_argmax``
-    reduction over member votes; ``EngineConfig(mesh=...)`` swaps in
-    the batch-sharded predict of ``fl/sharded.make_batch_predict`` so
-    one engine spans a mesh;
+    Pallas ``vote_argmax`` reduction over member votes;
+    ``EngineConfig(mesh=...)`` swaps in the batch-sharded predict of
+    ``fl/sharded.make_batch_predict`` so one engine spans a mesh;
+  * ``compile_cache`` — the PROCESS-WIDE compiled-predict cache engines
+    draw from: structurally identical tenants share one XLA program;
+  * ``registry``  — the multi-tenant frontend: many (federation ×
+    version) checkpoint streams, each behind its own engine, hot-swapped
+    on publish;
   * ``scheduler`` — the async deadline dispatch loop: a partial batch
     runs on its own after ``t_max_s``, no ``flush()`` needed;
   * ``cache``     — shard-resident incremental vote cache built on
@@ -34,15 +40,20 @@ from repro.serve.artifact import (
     save_artifact,
 )
 from repro.serve.cache import ShardVoteCache
+from repro.serve.compile_cache import cache_stats, clear_cache
 from repro.serve.engine import EngineConfig, ServeEngine
+from repro.serve.registry import ModelRegistry
 from repro.serve.scheduler import DeadlineScheduler
 
 __all__ = [
     "DeadlineScheduler",
     "EngineConfig",
     "LoadedArtifact",
+    "ModelRegistry",
     "ServeEngine",
     "ShardVoteCache",
+    "cache_stats",
+    "clear_cache",
     "ensemble_signature",
     "latest_artifact",
     "load_artifact",

@@ -34,24 +34,46 @@ from __future__ import annotations
 
 import json
 import struct
+import time
 import zlib
 from pathlib import Path
-from typing import Any, NamedTuple
+from typing import Any, NamedTuple, Optional
 
 import jax
+import numpy as np
 
 from repro.core import boosting, hetero
 from repro.core.hetero import HeterogeneousSpec
-from repro.core.serialization import deserialize, serialize, wire_format
+from repro.core.serialization import (
+    CODEC_BF16,
+    CODEC_INT8,
+    CODEC_RAW,
+    CODEC_U8,
+    decode_leaf,
+    deserialize,
+    encode_leaf,
+    encoded_nbytes,
+    outlier_rows,
+    serialize,
+    wire_format,
+)
 from repro.learners import LearnerSpec, WeakLearner, available_learners, get_learner
 
 MAGIC = b"MAFLSRV1"
 # Reader capability.  Homogeneous artifacts still write format_version 1
 # (their layout is unchanged — old readers keep working); heterogeneous
-# artifacts write 2.
-MANIFEST_VERSION = 2
+# artifacts write 2; quantized artifacts (either flavour) write 3 and
+# carry a per-leaf "leaf_codecs" list in the manifest.
+MANIFEST_VERSION = 3
 HOMOGENEOUS_VERSION = 1
+HETERO_VERSION = 2
+QUANTIZED_VERSION = 3
 HETERO_LEARNER = "heterogeneous"  # the manifest "learner" key of a mix
+
+QUANTIZE_MODES = ("bf16", "int8")
+# float leaves below this share of the float payload stay raw: biases,
+# thresholds, and priors are noise-sized but decision-critical
+SMALL_LEAF_SHARE = 0.05
 
 
 class LoadedArtifact(NamedTuple):
@@ -117,6 +139,182 @@ def _hetero_template(
     )
 
 
+# ---------------------------------------------------------------------------
+# Quantization planning — which codec each leaf gets, and the
+# vote-preserving calibration that promotes un-quantizable member slots
+# ---------------------------------------------------------------------------
+
+
+def _group_leaf_plans(params_leaves, mode: str) -> list:
+    """Default per-leaf codec plan for ONE ensemble's params leaves."""
+    float_total = sum(
+        l.nbytes for l in params_leaves if np.issubdtype(l.dtype, np.floating)
+    )
+    plans = []
+    for l in params_leaves:
+        if np.issubdtype(l.dtype, np.integer):
+            in_range = l.size == 0 or (int(l.min()) >= 0 and int(l.max()) <= 255)
+            plans.append({"codec": CODEC_U8 if in_range else CODEC_RAW})
+        elif not np.issubdtype(l.dtype, np.floating) or l.ndim < 2 \
+                or l.nbytes < SMALL_LEAF_SHARE * float_total:
+            plans.append({"codec": CODEC_RAW})
+        elif mode == "bf16":
+            plans.append({"codec": CODEC_BF16})
+        else:
+            plans.append({"codec": CODEC_INT8, "outlier_rows": outlier_rows(l),
+                          "promoted_slots": []})
+    return plans
+
+
+def _plan_ensembles(ensembles: list, mode: str) -> list:
+    """Per-leaf plans for the FULL artifact pytree flatten order — params
+    leaves get the requested codec, alpha/count stay raw (they weight the
+    vote tally directly; quantizing them would change served votes)."""
+    if mode not in QUANTIZE_MODES:
+        raise ValueError(f"quantize must be one of {QUANTIZE_MODES}, got {mode!r}")
+    plans = []
+    for ens in ensembles:
+        params_leaves = [np.asarray(l) for l in jax.tree.flatten(ens.params)[0]]
+        n_rest = len(jax.tree.flatten(ens)[0]) - len(params_leaves)
+        plans += _group_leaf_plans(params_leaves, mode)
+        plans += [{"codec": CODEC_RAW}] * n_rest  # alpha, count
+    return plans
+
+
+def _quantize_roundtrip(ensemble: Any, plans: list) -> Any:
+    """What a consumer will serve: encode + decode every leaf."""
+    leaves, treedef = jax.tree.flatten(ensemble)
+    out = []
+    for l, p in zip(leaves, plans):
+        ln = np.asarray(l)
+        out.append(
+            jax.numpy.asarray(decode_leaf(encode_leaf(ln, p), p, ln.shape, ln.dtype))
+        )
+    return jax.tree.unflatten(treedef, out)
+
+
+def _calibrate_plans(
+    spec, ensemble, plans: list, calibrate, committee_size: int | None
+) -> list:
+    """Greedy vote-preserving promotion: serve the quantized ensemble on
+    the calibration rows and, while any vote differs from the f32
+    ensemble's, promote the member slot whose raw restoration fixes the
+    most rows (its params are stored raw; alpha stays untouched either
+    way).  Terminates at all-slots-raw, which is exact by construction —
+    so the saved artifact's votes on the calibration set are bit-identical
+    to the f32 artifact's."""
+    X = jax.numpy.asarray(np.asarray(calibrate, np.float32))
+    is_hetero = isinstance(spec, HeterogeneousSpec)
+    committee = committee_size is not None
+
+    def votes(ens):
+        if is_hetero:
+            return np.asarray(
+                hetero.hetero_strong_predict(spec, ens, X, committee=committee)
+            )
+        learner = get_learner(spec.name)
+        return np.asarray(
+            boosting.strong_predict(learner, spec, ens, X, committee=committee)
+        )
+
+    ensembles = list(ensemble) if is_hetero else [ensemble]
+    group_slices = []  # plan-index range per group
+    off = 0
+    for ens in ensembles:
+        n = len(jax.tree.flatten(ens)[0])
+        group_slices.append((off, off + n))
+        off += n
+
+    want = votes(ensemble)
+
+    def rebuild(ps):
+        groups = [
+            _quantize_roundtrip(ens, ps[a:b])
+            for ens, (a, b) in zip(ensembles, group_slices)
+        ]
+        return tuple(groups) if is_hetero else groups[0]
+
+    flips = int((votes(rebuild(plans)) != want).sum())
+    if flips == 0:
+        return plans
+
+    # Promotion actions: an int8 leaf can restore ONE member slot raw
+    # (cheap — one slot's rows); a bf16 leaf has no per-slot sections,
+    # so its only escape hatch is falling back to raw wholesale.
+    actions: list = []
+    for g, ens in enumerate(ensembles):
+        a, b = group_slices[g]
+        if any(p["codec"] == CODEC_INT8 for p in plans[a:b]):
+            actions += [("slot", g, t) for t in range(int(ens.count))]
+    actions += [
+        ("leaf", i, None) for i, p in enumerate(plans) if p["codec"] == CODEC_BF16
+    ]
+
+    def apply(ps, action):
+        kind, x, t = action
+        if kind == "slot":
+            a, b = group_slices[x]
+            return [
+                dict(p, promoted_slots=sorted(set(p["promoted_slots"]) | {t}))
+                if a <= i < b and p["codec"] == CODEC_INT8 else p
+                for i, p in enumerate(ps)
+            ]
+        return [dict(p, codec=CODEC_RAW) if i == x else p for i, p in enumerate(ps)]
+
+    # Greedy: each round, apply the single action that fixes the most
+    # calibration rows (ties → first).  Applying EVERY action makes the
+    # round-trip the identity on all voting members, so the loop always
+    # reaches flips == 0.
+    applied: set = set()
+    while flips > 0 and len(applied) < len(actions):
+        best = None
+        for act in actions:
+            if act in applied:
+                continue
+            trial = apply(plans, act)
+            ft = int((votes(rebuild(trial)) != want).sum())
+            if best is None or ft < best[1]:
+                best = (act, ft, trial)
+        applied.add(best[0])
+        flips, plans = best[1], best[2]
+    return plans
+
+
+def _demote_uneconomic(ensemble: Any, plans: list) -> list:
+    """A quantized leaf whose encoded form ends up no smaller than raw
+    (outlier rows + promoted slots ate the savings) ships raw instead —
+    exactness is free and the artifact never grows past its f32 twin."""
+    leaves = [np.asarray(l) for l in jax.tree.flatten(ensemble)[0]]
+    return [
+        {"codec": CODEC_RAW}
+        if p["codec"] != CODEC_RAW
+        and encoded_nbytes(p, l.shape, l.dtype) >= l.nbytes
+        else p
+        for l, p in zip(leaves, plans)
+    ]
+
+
+def _quantized_payload(ensemble: Any, plans: list) -> bytes:
+    leaves = [np.asarray(l) for l in jax.tree.flatten(ensemble)[0]]
+    if len(leaves) != len(plans):
+        raise ValueError(f"{len(plans)} leaf plans for {len(leaves)} leaves")
+    return b"".join(encode_leaf(l, p) for l, p in zip(leaves, plans))
+
+
+def _maybe_quantize(
+    spec, ensemble, quantize: Optional[str], calibrate, committee_size
+):
+    """Returns (payload, leaf_codecs) — leaf_codecs is None unquantized."""
+    if quantize is None:
+        return serialize(ensemble, packed=True)[0], None
+    ensembles = list(ensemble) if isinstance(spec, HeterogeneousSpec) else [ensemble]
+    plans = _plan_ensembles(ensembles, quantize)
+    if calibrate is not None:
+        plans = _calibrate_plans(spec, ensemble, plans, calibrate, committee_size)
+    plans = _demote_uneconomic(ensemble, plans)
+    return _quantized_payload(ensemble, plans), plans
+
+
 def save_artifact(
     path: str | Path,
     spec: LearnerSpec | HeterogeneousSpec,
@@ -124,6 +322,8 @@ def save_artifact(
     *,
     committee_size: int | None = None,
     extra: dict | None = None,
+    quantize: str | None = None,
+    calibrate: Any = None,
 ) -> Path:
     """Write a single-file serving artifact; returns the path.
 
@@ -131,10 +331,21 @@ def save_artifact(
     v1 homogeneous manifest, a ``HeterogeneousSpec`` (with ``ensemble``
     the matching per-group tuple) writes the v2 heterogeneous one.  For
     heterogeneous committees (DistBoost.F) ``committee_size`` is the
-    FEDERATION size — each slot stores one seat block per group."""
+    FEDERATION size — each slot stores one seat block per group.
+
+    ``quantize`` ("bf16" or "int8") writes a v3 artifact whose payload
+    leaves are individually encoded (the manifest records each leaf's
+    codec + promoted slots; scales travel inside the payload).  With
+    ``calibrate`` (an [n, d] row matrix), the saver verifies the
+    dequantized ensemble's votes against the f32 ensemble on those rows
+    and stores raw any member slot whose votes quantization would flip —
+    the committed artifact serves bit-identical votes on the
+    calibration set, and tree-structured learners are exact for ALL
+    inputs (argmax repair preserves every leaf row's winner)."""
     if isinstance(spec, HeterogeneousSpec):
         return _save_hetero(
-            Path(path), spec, ensemble, committee_size=committee_size, extra=extra
+            Path(path), spec, ensemble, committee_size=committee_size, extra=extra,
+            quantize=quantize, calibrate=calibrate,
         )
     path = Path(path)
     template = _ensemble_template(spec, ensemble.alpha.shape[0], committee_size)
@@ -143,9 +354,11 @@ def save_artifact(
         raise ValueError(
             f"ensemble does not match the {spec.name!r} template: {got} != {want}"
         )
-    (payload,) = serialize(ensemble, packed=True)
+    payload, plans = _maybe_quantize(
+        spec, ensemble, quantize, calibrate, committee_size
+    )
     manifest = {
-        "format_version": HOMOGENEOUS_VERSION,
+        "format_version": HOMOGENEOUS_VERSION if plans is None else QUANTIZED_VERSION,
         "learner": spec.name,
         "n_features": spec.n_features,
         "n_classes": spec.n_classes,
@@ -156,6 +369,9 @@ def save_artifact(
         "payload_bytes": len(payload),
         "payload_crc32": zlib.crc32(payload),
     }
+    if plans is not None:
+        manifest["quantize"] = quantize
+        manifest["leaf_codecs"] = plans
     return _write(path, manifest, payload, extra)
 
 
@@ -181,6 +397,8 @@ def _save_hetero(
     *,
     committee_size: int | None,
     extra: dict | None,
+    quantize: str | None = None,
+    calibrate: Any = None,
 ) -> Path:
     if committee_size is not None and committee_size != hspec.n_collaborators:
         raise ValueError(
@@ -207,9 +425,11 @@ def _save_hetero(
         member_learners = [
             hspec.specs[g].name for g in range(hspec.n_groups) for _ in range(counts[g])
         ]
-    (payload,) = serialize(ensemble, packed=True)
+    payload, plans = _maybe_quantize(
+        hspec, ensemble, quantize, calibrate, committee_size
+    )
     manifest = {
-        "format_version": MANIFEST_VERSION,
+        "format_version": HETERO_VERSION if plans is None else QUANTIZED_VERSION,
         "learner": HETERO_LEARNER,
         "n_features": hspec.n_features,
         "n_classes": hspec.n_classes,
@@ -231,6 +451,9 @@ def _save_hetero(
         "payload_bytes": len(payload),
         "payload_crc32": zlib.crc32(payload),
     }
+    if plans is not None:
+        manifest["quantize"] = quantize
+        manifest["leaf_codecs"] = plans
     return _write(path, manifest, payload, extra)
 
 
@@ -239,6 +462,34 @@ _MANIFEST_KEYS = (
     "ensemble_capacity", "ensemble_count", "committee_size",
     "payload_bytes", "payload_crc32",
 )
+
+
+def _decode_payload(payload: bytes, template: Any, manifest: dict, path) -> Any:
+    """Pour a payload back into the template pytree — per-leaf codec
+    decode for quantized (v3) artifacts, packed deserialize otherwise."""
+    plans = manifest.get("leaf_codecs")
+    if plans is None:
+        return deserialize([payload], wire_format(template), packed=True)
+    leaves, treedef = jax.tree.flatten(template)
+    if len(plans) != len(leaves):
+        raise ValueError(
+            f"{path}: manifest lists {len(plans)} leaf codecs "
+            f"for {len(leaves)} payload leaves"
+        )
+    out, off = [], 0
+    for leaf, plan in zip(leaves, plans):
+        shape, dtype = tuple(leaf.shape), np.dtype(str(leaf.dtype))
+        try:
+            n = encoded_nbytes(plan, shape, dtype)
+            out.append(decode_leaf(payload[off : off + n], plan, shape, dtype))
+        except ValueError as e:
+            raise ValueError(f"{path}: {e}") from e
+        off += n
+    if off != len(payload):
+        raise ValueError(
+            f"{path}: quantized payload length mismatch ({len(payload)} != {off})"
+        )
+    return jax.tree.unflatten(treedef, out)
 
 
 def load_artifact(path: str | Path) -> LoadedArtifact:
@@ -290,7 +541,7 @@ def load_artifact(path: str | Path) -> LoadedArtifact:
         spec, manifest["ensemble_capacity"], manifest["committee_size"],
         context=str(path),
     )
-    ensemble = deserialize([payload], wire_format(template), packed=True)
+    ensemble = _decode_payload(payload, template, manifest, path)
     ensemble = jax.tree.map(jax.numpy.asarray, ensemble)
     return LoadedArtifact(
         learner=get_learner(spec.name),
@@ -320,7 +571,7 @@ def _load_hetero(path, manifest: dict, payload: bytes) -> LoadedArtifact:
     template = _hetero_template(
         hspec, manifest["ensemble_capacity"], committee, context=str(path)
     )
-    ensemble = deserialize([payload], wire_format(template), packed=True)
+    ensemble = _decode_payload(payload, template, manifest, path)
     ensemble = jax.tree.map(jax.numpy.asarray, ensemble)
     return LoadedArtifact(
         learner=None,
@@ -346,6 +597,8 @@ def publish_artifact(
     version: int,
     committee_size: int | None = None,
     extra: dict | None = None,
+    quantize: str | None = None,
+    calibrate: Any = None,
 ) -> Path:
     """One checkpoint of a still-training federation: write a fresh
     versioned artifact, then atomically repoint ``LATEST`` at it.
@@ -360,6 +613,7 @@ def publish_artifact(
     save_artifact(
         path, spec, ensemble, committee_size=committee_size,
         extra={"publish_version": int(version), **(extra or {})},
+        quantize=quantize, calibrate=calibrate,
     )
     tmp = publish_dir / (LATEST + ".tmp")
     tmp.write_text(path.name)
@@ -367,11 +621,31 @@ def publish_artifact(
     return path
 
 
-def latest_artifact(publish_dir: str | Path) -> Path | None:
-    """Resolve the ``LATEST`` pointer; None when nothing is published."""
-    pointer = Path(publish_dir) / LATEST
+def _resolve_latest(pointer: Path) -> Path | None:
     if not pointer.exists():
         return None
     name = pointer.read_text().strip()
-    path = pointer.parent / name
-    return path if name and path.exists() else None
+    return (pointer.parent / name) if name else None
+
+
+def latest_artifact(publish_dir: str | Path) -> Path | None:
+    """Resolve the ``LATEST`` pointer; None when nothing is published.
+
+    Hardened against torn reads: ``publish_artifact`` writes the version
+    file before swapping the pointer, but a consumer on another
+    filesystem view (or racing a publisher that died mid-publish) can
+    observe a pointer naming a not-yet-visible file.  One short
+    re-resolve absorbs the benign interleaving; a pointer that STILL
+    names a missing file is corruption and raises ``ValueError`` rather
+    than masquerading as "nothing published"."""
+    pointer = Path(publish_dir) / LATEST
+    path = _resolve_latest(pointer)
+    if path is not None and not path.exists():  # torn read: retry once
+        time.sleep(0.05)
+        path = _resolve_latest(pointer)
+        if path is not None and not path.exists():
+            raise ValueError(
+                f"{pointer}: names artifact {pointer.read_text().strip()!r} "
+                f"which does not exist (torn or corrupt publish)"
+            )
+    return path

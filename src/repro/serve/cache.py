@@ -88,26 +88,62 @@ class ShardVoteCache:
         self.misses = 0  # first-contact requests (full tally build)
         self.members_folded = 0  # total member-predict passes actually run
         self.reregistrations = 0  # key reuse with different rows (tally rebuilt)
-        learner_, spec_, committee_ = learner, spec, committee
-
+        # refresh programs are built lazily per heterogeneous active-group
+        # mask: a group with count == 0 has nothing to fold, so the masked
+        # program passes its tally through untouched instead of tracing
+        # the group's whole member-predict loop body
+        self._refreshers: Dict[Any, Any] = {}
         if self.hetero:
-
-            def _refresh(ens, tallies, X):
-                return hetero.hetero_tally_new_votes(
-                    spec_, ens, tallies, X, committee=committee_
-                )
-
-            self._refresh = jax.jit(_refresh)
             self._argmax = jax.jit(hetero.hetero_tally_predict)
         else:
+            self._argmax = jax.jit(scoring.tally_predict)
+
+    def _active_mask(self) -> Optional[tuple]:
+        """Which groups hold any voting member (committees move in
+        lockstep — one fused tally — and homogeneous caches have no
+        groups: both stay unmasked)."""
+        if not self.hetero or self.committee:
+            return None
+        mask = tuple(c > 0 for c in self._counts)
+        return mask if any(mask) else (True,) * len(mask)
+
+    def _refresh_fn(self):
+        active = self._active_mask()
+        fn = self._refreshers.get(active)
+        if fn is not None:
+            return fn
+        learner_, spec_, committee_ = self.learner, self.spec, self.committee
+        if not self.hetero:
 
             def _refresh(ens, tally, X):
                 return scoring.tally_new_votes(
                     learner_, spec_, ens, tally, X, committee=committee_
                 )
 
-            self._refresh = jax.jit(_refresh)
-            self._argmax = jax.jit(scoring.tally_predict)
+        elif active is None:
+
+            def _refresh(ens, tallies, X):
+                return hetero.hetero_tally_new_votes(
+                    spec_, ens, tallies, X, committee=committee_
+                )
+
+        else:
+            learners = hetero.resolve(spec_)
+
+            def _refresh(ens, tallies, X):
+                # inactive groups fold zero members either way (their
+                # fori_loop is zero-trip); skipping them entirely keeps
+                # the tally bitwise identical without tracing their
+                # member predicts
+                return tuple(
+                    scoring.tally_new_votes(lrn, sp, ens[g], tallies[g], X)
+                    if active[g] else tallies[g]
+                    for g, (lrn, sp) in enumerate(zip(learners, spec_.specs))
+                )
+
+        fn = jax.jit(_refresh)
+        self._refreshers[active] = fn
+        return fn
 
     @classmethod
     def from_artifact(cls, art) -> "ShardVoteCache":
@@ -163,7 +199,7 @@ class ShardVoteCache:
                 self.misses += 1  # full tally build (first contact)
             else:
                 self.partial_hits += 1  # folds only the appended members
-            shard.tally = self._refresh(self.ensemble, shard.tally, shard.X)
+            shard.tally = self._refresh_fn()(self.ensemble, shard.tally, shard.X)
             shard.counted = self._count
             self.members_folded += new
         return np.asarray(self._argmax(shard.tally))

@@ -1,0 +1,130 @@
+"""Process-wide compiled-predict cache — one XLA program per serving
+shape, shared by every engine in the process.
+
+``ServeEngine`` used to key its warm compile cache per INSTANCE (batch
+size only), so a fleet frontend hosting N tenants of the same model
+family paid N identical XLA compiles.  Compiled predict programs are
+pure functions of their structural inputs, so the correct cache scope is
+the process: the key is everything the traced program closes over —
+
+  * backend tag (local / mesh / heterogeneous mix),
+  * the spec's structural identity (learner registry key, problem
+    geometry, canonical hparams JSON — per group for a mix, plus the
+    collaborator assignment),
+  * committee / use_pallas / batch size,
+  * the ensemble's full structural signature (treedef + every leaf's
+    shape/dtype — ``artifact.ensemble_signature``, made hashable),
+  * mesh identity, and the heterogeneous active-group mask.
+
+Anything NOT in the key must not change the traced program; notably the
+ensemble's values (alpha/count/params) are runtime arguments, which is
+what makes hot-swapping checkpoints compile-free in the first place.
+
+Tenant 2..N with an identical (learner, B) signature is compile-free:
+``get_or_build`` returns the shared jitted callable and counts a hit.
+``cache_stats()`` reports the process hit rate — the number the
+multi-tenant bench commits to ``BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from typing import Any, Callable, Dict, Tuple
+
+from repro.core.hetero import HeterogeneousSpec
+from repro.learners.base import LearnerSpec
+
+_LOCK = threading.Lock()
+_CACHE: Dict[tuple, Callable] = {}
+_HITS = 0
+_MISSES = 0
+
+
+def spec_identity(spec: LearnerSpec | HeterogeneousSpec) -> tuple:
+    """Hashable structural identity of a serving spec.  Two specs with
+    equal identities trace identical member-predict programs."""
+    if isinstance(spec, HeterogeneousSpec):
+        return (
+            "hetero",
+            tuple(spec_identity(s) for s in spec.specs),
+            tuple(spec.assignment),
+        )
+    return (
+        spec.name,
+        int(spec.n_features),
+        int(spec.n_classes),
+        json.dumps(dict(spec.hparams), sort_keys=True),
+    )
+
+
+def _hashable_signature(signature: tuple) -> tuple:
+    treedef, leaves = signature
+    return (treedef, tuple((tuple(s), str(d)) for s, d in leaves))
+
+
+def program_key(
+    spec: LearnerSpec | HeterogeneousSpec,
+    signature: tuple,  # artifact.ensemble_signature(ensemble)
+    *,
+    batch_size: int,
+    committee: bool,
+    use_pallas: bool,
+    mesh: Any = None,
+    active_mask: Tuple[bool, ...] | None = None,
+) -> tuple:
+    """The full cache key for one compiled serving program."""
+    try:
+        mesh_id = ("mesh", hash(mesh)) if mesh is not None else None
+    except TypeError:  # an unhashable mesh still gets a stable identity
+        mesh_id = ("mesh-id", id(mesh))
+    return (
+        spec_identity(spec),
+        _hashable_signature(signature),
+        int(batch_size),
+        bool(committee),
+        bool(use_pallas),
+        mesh_id,
+        active_mask,
+    )
+
+
+def get_or_build(key: tuple, build: Callable[[], Callable]) -> Tuple[Callable, bool]:
+    """Return ``(program, was_hit)`` — building (and caching) on miss.
+
+    The build itself runs outside the lock: tracing/compiling can take
+    seconds and must not serialize unrelated tenants.  Two racing
+    builders of the same key both compile but converge on one cached
+    program (last write wins; the programs are interchangeable).
+    """
+    global _HITS, _MISSES
+    with _LOCK:
+        fn = _CACHE.get(key)
+        if fn is not None:
+            _HITS += 1
+            return fn, True
+        _MISSES += 1
+    fn = build()
+    with _LOCK:
+        _CACHE[key] = fn
+    return fn, False
+
+
+def cache_stats() -> dict:
+    """Process-wide counters: programs resident, hits, misses, hit rate."""
+    with _LOCK:
+        total = _HITS + _MISSES
+        return {
+            "programs": len(_CACHE),
+            "hits": _HITS,
+            "misses": _MISSES,
+            "hit_rate": (_HITS / total) if total else 0.0,
+        }
+
+
+def clear_cache() -> None:
+    """Drop every cached program and zero the counters (tests/benches)."""
+    global _HITS, _MISSES
+    with _LOCK:
+        _CACHE.clear()
+        _HITS = 0
+        _MISSES = 0

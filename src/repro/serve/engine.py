@@ -3,9 +3,20 @@
 Serving traffic arrives as ragged row groups; XLA wants static shapes.
 The engine packs incoming rows into static ``[B, d]`` batches (padding
 the ragged tail), runs ONE jitted ensemble predict per batch — compiled
-once per batch size and kept warm in a compile cache — and reduces the
+once per batch size and shared PROCESS-WIDE through
+``serve/compile_cache.py``, so N tenants of the same (learner, B)
+structural signature pay one XLA compile between them — and reduces the
 members' votes with the ``vote_argmax`` kernel (Pallas on TPU, pure-jnp
 oracle elsewhere; the oracle is bit-for-bit ``boosting.strong_predict``).
+``stats.compiles`` counts programs this engine built; ``cache_hits``
+counts programs it borrowed warm from another engine.
+
+Heterogeneous engines are count-aware: a learner group whose ensemble
+holds zero voting members (``count == 0`` — its ``used`` weights are
+identically 0.0, an exact no-op in the vote tally) is skipped entirely
+instead of predicting its full T-slot buffer, and the compiled program
+is keyed by the active-group mask so a later checkpoint that fills the
+group swaps to the full program automatically.
 
 Every learner serves behind the same API because the predict signature
 is uniform across the registry (``predict(spec, params, X) -> [n] i32``,
@@ -39,6 +50,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 import time
 from typing import Any, Callable, Deque, Dict, List, Optional
 
@@ -50,12 +62,91 @@ from repro.core import boosting, hetero, scoring
 from repro.core.hetero import HeterogeneousSpec
 from repro.kernels import ops
 from repro.learners.base import LearnerSpec, WeakLearner
+from repro.serve import compile_cache
 from repro.serve.artifact import ensemble_signature
 
 
 # Rolling reservoir size for latency samples: enough for stable p99 at
 # any traffic level while keeping a long-lived engine's memory bounded.
 STATS_WINDOW = 100_000
+
+
+# -- compiled-predict builders (module-level: the process-wide cache must
+# share programs ACROSS engines, so nothing here may close over one) -----
+
+
+def _build_homogeneous_predict(learner, spec, committee, use_pallas):
+    def batch_predict(ens, Xb):
+        T = ens.alpha.shape[0]
+        member = lambda t: scoring.member_prediction(
+            learner, spec, scoring._take_slot(ens.params, t), Xb,
+            committee=committee,
+        )
+        preds = jax.vmap(member)(jnp.arange(T))  # [T, B]
+        used = (jnp.arange(T) < ens.count).astype(jnp.float32) * ens.alpha
+        return ops.vote_argmax(
+            preds, used, n_classes=spec.n_classes, use_pallas=use_pallas
+        )
+
+    return jax.jit(batch_predict)
+
+
+def _build_hetero_predict(spec, committee, use_pallas, active):
+    """Per-learner-group member predicts (committees fold the cross-group
+    seat tally per member first), concatenated into one [sum_g T, B] vote
+    stack for a single vote_argmax reduction.  ``active`` masks out
+    groups with zero voting members — their ``used`` weights are
+    identically 0.0, so skipping them is bitwise identical and saves the
+    whole group's T-slot member predict."""
+    learners = hetero.resolve(spec)
+
+    def batch_predict(ens, Xb):
+        if committee:
+            T = ens[0].alpha.shape[0]
+
+            def member(t):
+                tally = hetero._committee_tally(
+                    learners, spec,
+                    [scoring._take_slot(e.params, t) for e in ens], Xb,
+                )
+                return jnp.argmax(tally, axis=-1).astype(jnp.int32)
+
+            preds = jax.vmap(member)(jnp.arange(T))  # [T, B]
+            used = (
+                jnp.arange(T) < ens[0].count
+            ).astype(jnp.float32) * ens[0].alpha
+        else:
+            parts, useds = [], []
+            for g, (lrn, sp) in enumerate(zip(learners, spec.specs)):
+                if active is not None and not active[g]:
+                    continue  # count == 0: exact +0.0 in the tally
+                T = ens[g].alpha.shape[0]
+                member = lambda t, g=g, lrn=lrn, sp=sp: scoring.member_prediction(
+                    lrn, sp, scoring._take_slot(ens[g].params, t), Xb,
+                )
+                parts.append(jax.vmap(member)(jnp.arange(T)))  # [T, B]
+                useds.append(
+                    (jnp.arange(T) < ens[g].count).astype(jnp.float32)
+                    * ens[g].alpha
+                )
+            preds = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+            used = useds[0] if len(useds) == 1 else jnp.concatenate(useds)
+        return ops.vote_argmax(
+            preds, used, n_classes=spec.n_classes, use_pallas=use_pallas
+        )
+
+    return jax.jit(batch_predict)
+
+
+def _build_mesh_predict(learner, spec, mesh, committee, use_pallas):
+    # batch-sharded backend: the same member-vote/argmax program,
+    # shard_map'd over the mesh's federation axes
+    from repro.fl.sharded import make_batch_predict
+
+    sharded = make_batch_predict(
+        learner, spec, mesh, committee=committee, use_pallas=use_pallas
+    )
+    return lambda ens, Xb: sharded(ens.params, ens.alpha, ens.count, Xb)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +175,9 @@ class EngineStats:
     batches: int = 0
     padded_rows: int = 0
     compiles: int = 0
+    # programs this engine needed but another engine had already built —
+    # the per-tenant view of the process-wide compile cache
+    cache_hits: int = 0
     batch_seconds: Deque[float] = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=STATS_WINDOW)
     )
@@ -157,7 +251,10 @@ class ServeEngine:
                     f"{shards} federation shards of the mesh"
                 )
         self.stats = EngineStats()
-        self._fns: Dict[int, Callable] = {}  # warm compile cache: B -> jitted
+        self._refresh_activity()
+        # engine-local view of the process-wide compile cache, keyed by
+        # (B, active-group mask) for lock-free steady-state lookups
+        self._fns: Dict[tuple, Callable] = {}
         # (id, row, t_submit); deque so batch draining is O(B), not a slice-copy
         self._queue: Deque[tuple[int, np.ndarray, float]] = collections.deque()
         self._next_id = 0
@@ -197,84 +294,59 @@ class ServeEngine:
         )
 
     # -- the one jitted predict per (learner mix, B) -----------------------
+    def _refresh_activity(self) -> None:
+        """Host-mirror which heterogeneous groups hold any voting member.
+
+        A group with ``count == 0`` has ``used ≡ 0.0`` — an exact no-op
+        in the vote tally — so the compiled predict skips it entirely.
+        Committees are exempt (group counts move in lockstep: one shared
+        count, one fused tally), as are homogeneous and mesh engines (no
+        groups).  An all-empty mixture falls back to all-active so a
+        freshly initialised federation still serves."""
+        if self.hetero and not self.committee:
+            mask = tuple(int(e.count) > 0 for e in self.ensemble)
+            self._active = mask if any(mask) else (True,) * len(mask)
+        else:
+            self._active = None
+
     def _fn(self, B: int) -> Callable:
         """The jitted ``(ensemble, Xb) -> [B] i32`` program for one batch
         size.  All backends — local homogeneous, mesh-sharded, and the
         heterogeneous per-group mix — end in ONE ``vote_argmax``
-        reduction over the stacked member votes."""
-        if B not in self._fns:
-            learner, spec, committee = self.learner, self.spec, self.committee
-            use_pallas = self.use_pallas
-            if self.config.mesh is not None:
-                # batch-sharded backend: the same member-vote/argmax
-                # program, shard_map'd over the mesh's federation axes
-                from repro.fl.sharded import make_batch_predict
-
-                sharded = make_batch_predict(
-                    learner, spec, self.config.mesh,
-                    committee=committee, use_pallas=use_pallas,
-                )
-                self._fns[B] = lambda ens, Xb: sharded(
-                    ens.params, ens.alpha, ens.count, Xb
-                )
-            elif self.hetero:
-                # per-learner-group member predicts (committees fold the
-                # cross-group seat tally per member first), concatenated
-                # into one [sum_g T, B] vote stack for a single
-                # vote_argmax reduction
-                learners = hetero.resolve(spec)
-
-                def batch_predict(ens, Xb):
-                    if committee:
-                        T = ens[0].alpha.shape[0]
-
-                        def member(t):
-                            tally = hetero._committee_tally(
-                                learners, spec,
-                                [scoring._take_slot(e.params, t) for e in ens], Xb,
-                            )
-                            return jnp.argmax(tally, axis=-1).astype(jnp.int32)
-
-                        preds = jax.vmap(member)(jnp.arange(T))  # [T, B]
-                        used = (
-                            jnp.arange(T) < ens[0].count
-                        ).astype(jnp.float32) * ens[0].alpha
-                    else:
-                        parts, useds = [], []
-                        for g, (lrn, sp) in enumerate(zip(learners, spec.specs)):
-                            T = ens[g].alpha.shape[0]
-                            member = lambda t, g=g, lrn=lrn, sp=sp: scoring.member_prediction(
-                                lrn, sp, scoring._take_slot(ens[g].params, t), Xb,
-                            )
-                            parts.append(jax.vmap(member)(jnp.arange(T)))  # [T, B]
-                            useds.append(
-                                (jnp.arange(T) < ens[g].count).astype(jnp.float32)
-                                * ens[g].alpha
-                            )
-                        preds = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
-                        used = useds[0] if len(useds) == 1 else jnp.concatenate(useds)
-                    return ops.vote_argmax(
-                        preds, used, n_classes=spec.n_classes, use_pallas=use_pallas
-                    )
-
-                self._fns[B] = jax.jit(batch_predict)
-            else:
-
-                def batch_predict(ens, Xb):
-                    T = ens.alpha.shape[0]
-                    member = lambda t: scoring.member_prediction(
-                        learner, spec, scoring._take_slot(ens.params, t), Xb,
-                        committee=committee,
-                    )
-                    preds = jax.vmap(member)(jnp.arange(T))  # [T, B]
-                    used = (jnp.arange(T) < ens.count).astype(jnp.float32) * ens.alpha
-                    return ops.vote_argmax(
-                        preds, used, n_classes=spec.n_classes, use_pallas=use_pallas
-                    )
-
-                self._fns[B] = jax.jit(batch_predict)
+        reduction over the stacked member votes.  Programs come from the
+        process-wide ``serve/compile_cache``: a structurally identical
+        tenant elsewhere in the process makes this a zero-compile hit."""
+        local_key = (B, self._active)
+        fn = self._fns.get(local_key)
+        if fn is not None:
+            return fn
+        key = compile_cache.program_key(
+            self.spec, ensemble_signature(self.ensemble),
+            batch_size=B, committee=self.committee, use_pallas=self.use_pallas,
+            mesh=self.config.mesh, active_mask=self._active,
+        )
+        if self.config.mesh is not None:
+            build = functools.partial(
+                _build_mesh_predict, self.learner, self.spec, self.config.mesh,
+                self.committee, self.use_pallas,
+            )
+        elif self.hetero:
+            build = functools.partial(
+                _build_hetero_predict, self.spec, self.committee,
+                self.use_pallas, self._active,
+            )
+        else:
+            build = functools.partial(
+                _build_homogeneous_predict, self.learner, self.spec,
+                self.committee, self.use_pallas,
+            )
+        fn, hit = compile_cache.get_or_build(key, build)
+        if hit:
+            self.stats.cache_hits += 1
+        else:
             self.stats.compiles += 1
-        return self._fns[B]
+        self._fns[local_key] = fn
+        return fn
 
     def warmup(self) -> None:
         """Pre-compile the steady-state batch shape."""
@@ -360,8 +432,10 @@ class ServeEngine:
 
     # -- live ensemble swap -------------------------------------------------
     def update_ensemble(self, ensemble: boosting.Ensemble) -> None:
-        """Swap in a grown ensemble; shapes are static so the warm compile
-        cache (keyed by batch size only) stays valid.
+        """Swap in a grown ensemble; shapes are static so the warm
+        compiled programs stay valid (a heterogeneous group going
+        empty→non-empty re-keys to the full-mixture program, which the
+        process cache may already hold).
 
         Capacity alone is NOT identity: an artifact from a different
         learner/spec can share ``alpha.shape`` while its params pytree
@@ -377,3 +451,4 @@ class ServeEngine:
                 "build a new engine for a different learner/spec/capacity"
             )
         self.ensemble = ensemble
+        self._refresh_activity()

@@ -1,0 +1,172 @@
+"""Multi-tenant model registry — one serving frontend, many federations.
+
+Production FL deployments serve many (federation × version) models at
+once.  ``ModelRegistry`` puts them behind one object: each TENANT is a
+named subscription to a ``publish_artifact`` checkpoint stream (a
+publish directory with a ``LATEST`` pointer), backed by its own
+``ServeEngine``.
+
+The registry is where the fleet-scale pieces meet:
+
+  * **Hot swap.**  ``refresh()`` polls each tenant's ``LATEST`` pointer
+    (hardened against torn reads by ``latest_artifact``) and, when a new
+    ``publish_version`` appears, swaps the grown ensemble into the live
+    engine via ``update_ensemble`` — the structural-signature check
+    guarantees the warm compiled programs stay valid, so a swap costs
+    zero compiles.  A checkpoint whose STRUCTURE changed (new learner,
+    capacity, or committee shape) fails that check and the registry
+    rebuilds the tenant's engine instead — counted separately, because a
+    rebuild may pay a compile where a swap never does.
+  * **Shared compiles.**  Engines draw programs from the process-wide
+    ``serve/compile_cache``; tenants 2..N of an identical (learner, B)
+    structural signature are compile-free.  ``stats()`` surfaces both
+    the per-tenant compile/hit counters and the process cache totals.
+  * **Quantized artifacts.**  A publisher writing ``quantize="int8"``
+    checkpoints changes nothing here: dequantized leaves keep their
+    f32 shapes/dtypes, so the structural signature — and therefore both
+    hot-swap and cross-tenant program sharing — is unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.serve import compile_cache
+from repro.serve.artifact import latest_artifact, load_artifact
+from repro.serve.engine import EngineConfig, ServeEngine
+
+
+@dataclasses.dataclass
+class Tenant:
+    name: str
+    publish_dir: Path
+    engine: ServeEngine
+    version: Optional[int]  # manifest publish_version (None: unversioned)
+    path: Path  # artifact file currently served
+    config: Optional[EngineConfig] = None  # tenant override (None: registry default)
+    swaps: int = 0  # compile-free update_ensemble refreshes
+    rebuilds: int = 0  # structural changes that needed a new engine
+
+
+def _artifact_version(manifest: dict) -> Optional[int]:
+    v = manifest.get("publish_version")
+    return int(v) if v is not None else None
+
+
+class ModelRegistry:
+    def __init__(self, *, config: Optional[EngineConfig] = None):
+        """``config`` is the default engine policy for tenants that do
+        not bring their own (batch size, pallas, deadline); the
+        ``committee`` field is per-artifact and always overridden."""
+        self._default = config or EngineConfig()
+        self._tenants: Dict[str, Tenant] = {}
+
+    # -- tenant lifecycle ---------------------------------------------------
+    def add_tenant(
+        self,
+        name: str,
+        publish_dir: str | Path,
+        *,
+        config: Optional[EngineConfig] = None,
+    ) -> ServeEngine:
+        """Subscribe ``name`` to a checkpoint stream and bring up its
+        engine from the stream's current ``LATEST``.  Returns the live
+        engine (borrow only — the registry owns the swap lifecycle)."""
+        if name in self._tenants:
+            raise ValueError(f"tenant {name!r} already registered")
+        publish_dir = Path(publish_dir)
+        path = latest_artifact(publish_dir)
+        if path is None:
+            raise ValueError(
+                f"tenant {name!r}: nothing published in {publish_dir}"
+            )
+        art = load_artifact(path)
+        engine = ServeEngine.from_artifact(
+            art, config=self._tenant_config(config, art)
+        )
+        self._tenants[name] = Tenant(
+            name=name, publish_dir=publish_dir, engine=engine,
+            version=_artifact_version(art.manifest), path=path, config=config,
+        )
+        return engine
+
+    def remove_tenant(self, name: str) -> None:
+        del self._tenants[self._require(name).name]
+
+    def _require(self, name: str) -> Tenant:
+        try:
+            return self._tenants[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown tenant {name!r}; registered: {sorted(self._tenants)}"
+            ) from None
+
+    def _tenant_config(
+        self, config: Optional[EngineConfig], art
+    ) -> EngineConfig:
+        base = config or self._default
+        return dataclasses.replace(base, committee=art.committee)
+
+    def tenants(self) -> list:
+        return sorted(self._tenants)
+
+    def engine(self, name: str) -> ServeEngine:
+        return self._require(name).engine
+
+    # -- the fleet data plane ----------------------------------------------
+    def predict(self, name: str, X) -> np.ndarray:
+        return self._require(name).engine.predict(X)
+
+    # -- checkpoint hot-swap ------------------------------------------------
+    def refresh(self, name: Optional[str] = None) -> Dict[str, Optional[int]]:
+        """Poll ``LATEST`` for one tenant (or all) and swap in any new
+        checkpoint.  Returns ``{tenant: publish_version}`` for the
+        tenants that changed.  Same-structure checkpoints hot-swap
+        compile-free; structural changes rebuild the engine (its
+        programs may still come warm from the process cache)."""
+        names = [self._require(name).name] if name is not None else self.tenants()
+        changed: Dict[str, Optional[int]] = {}
+        for n in names:
+            t = self._tenants[n]
+            path = latest_artifact(t.publish_dir)
+            if path is None or path == t.path:
+                continue
+            art = load_artifact(path)
+            version = _artifact_version(art.manifest)
+            if version is not None and version == t.version:
+                continue
+            try:
+                t.engine.update_ensemble(art.ensemble)
+                t.swaps += 1
+            except ValueError:
+                # structure changed under this tenant: a swap would make
+                # the warm programs serve garbage, so rebuild instead
+                t.engine = ServeEngine.from_artifact(
+                    art, config=self._tenant_config(t.config, art)
+                )
+                t.rebuilds += 1
+            t.version, t.path = version, path
+            changed[n] = version
+        return changed
+
+    # -- observability ------------------------------------------------------
+    def stats(self) -> dict:
+        """Per-tenant serving counters plus the process compile cache —
+        the fleet view: total programs built vs borrowed warm."""
+        tenants = {
+            n: {
+                "version": t.version,
+                "artifact": str(t.path),
+                "swaps": t.swaps,
+                "rebuilds": t.rebuilds,
+                "requests": t.engine.stats.requests,
+                "batches": t.engine.stats.batches,
+                "compiles": t.engine.stats.compiles,
+                "cache_hits": t.engine.stats.cache_hits,
+            }
+            for n, t in self._tenants.items()
+        }
+        return {"tenants": tenants, "compile_cache": compile_cache.cache_stats()}

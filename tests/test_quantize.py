@@ -1,0 +1,223 @@
+"""Quantized serving artifacts: bf16/int8 leaf codecs must shrink the
+payload WITHOUT changing a single served vote.
+
+Ensemble outputs are argmax votes (``vote_argmax``), so "close in
+float" is not the bar — every test here asserts bit-identical
+predictions between the f32 artifact and its quantized twin, across
+ragged batch sizes, for every registered learner, for v2 heterogeneous
+mixtures, and for DistBoost.F committee artifacts.  The saver's
+calibration pass guarantees this on the calibration rows by storing raw
+any member slot whose votes quantization would flip.
+"""
+import json
+import struct
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import boosting, hetero
+from repro.core.serialization import (
+    CODEC_RAW,
+    LEAF_CODECS,
+    decode_leaf,
+    encode_leaf,
+    encoded_nbytes,
+)
+from repro.learners import LearnerSpec
+from repro.serve import ensemble_signature, load_artifact, save_artifact
+from repro.serve.artifact import MAGIC
+
+from test_hetero import _hspec
+from test_serve import HPARAMS, _small_ensemble
+
+MODES = ("bf16", "int8")
+RAGGED_NS = (1, 7, 64)  # plus the full calibration set
+
+
+def _assert_votes_identical(predict, f32, q, X):
+    for n in (*RAGGED_NS, X.shape[0]):
+        want = np.asarray(predict(f32, X[:n]))
+        got = np.asarray(predict(q, X[:n]))
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("name", sorted(HPARAMS))
+def test_quantized_votes_bit_identical_every_learner(name, mode, tmp_path):
+    learner, spec, ens, X = _small_ensemble(name, jax.random.PRNGKey(0))
+    Xn = np.asarray(X, np.float32)
+    f32 = load_artifact(save_artifact(tmp_path / "f32.mafl", spec, ens))
+    q = load_artifact(
+        save_artifact(tmp_path / "q.mafl", spec, ens, quantize=mode, calibrate=Xn)
+    )
+    assert q.manifest["format_version"] == 3
+    assert q.manifest["quantize"] == mode
+    codecs = [p["codec"] for p in q.manifest["leaf_codecs"]]
+    assert set(codecs) <= set(LEAF_CODECS)
+    assert any(c != CODEC_RAW for c in codecs), codecs
+    # alpha and count weight the tally directly: always raw (the last
+    # two leaves in the Ensemble flatten order)
+    assert codecs[-2:] == [CODEC_RAW, CODEC_RAW]
+    # dequantized leaves keep f32 shapes/dtypes, so the structural
+    # signature — and with it hot-swap and cross-tenant program
+    # sharing — is unchanged
+    assert ensemble_signature(q.ensemble) == ensemble_signature(f32.ensemble)
+    _assert_votes_identical(
+        lambda a, Xs: boosting.strong_predict(a.learner, a.spec, a.ensemble, Xs),
+        f32, q, X,
+    )
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_quantized_committee_artifact(mode, tmp_path):
+    learner, spec, ens, X = _small_ensemble(
+        "nearest_centroid", jax.random.PRNGKey(1), committee_size=2
+    )
+    Xn = np.asarray(X, np.float32)
+    f32 = load_artifact(
+        save_artifact(tmp_path / "f32.mafl", spec, ens, committee_size=2)
+    )
+    q = load_artifact(
+        save_artifact(tmp_path / "q.mafl", spec, ens, committee_size=2,
+                      quantize=mode, calibrate=Xn)
+    )
+    assert q.committee and q.committee_size == 2
+    _assert_votes_identical(
+        lambda a, Xs: boosting.strong_predict(
+            a.learner, a.spec, a.ensemble, Xs, committee=True
+        ),
+        f32, q, X,
+    )
+
+
+def _mixed_ensemble(key, committee=False, rounds=3):
+    from repro.fl.partition import iid_partition
+    from test_hetero import C, N, _blobs
+
+    k1, k3 = jax.random.split(key)
+    X, y = _blobs(k1, n=N + 120)
+    Xs, ys, masks = iid_partition(X[:N], y[:N], C, k3)
+    hs = _hspec(["decision_tree", "ridge", "gaussian_nb"])
+    state = hetero.init_hetero_boost_state(
+        hs, rounds, masks, jax.random.fold_in(key, 1), committee=committee, X=Xs
+    )
+    rfn = (
+        jax.jit(lambda s: hetero.hetero_distboost_f_round(hs, s, Xs, ys, masks))
+        if committee
+        else jax.jit(lambda s: hetero.hetero_adaboost_f_round(hs, s, Xs, ys, masks))
+    )
+    for _ in range(rounds):
+        state, _ = rfn(state)
+    return hs, state.ensemble, X[N:]
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_quantized_heterogeneous_artifact(mode, tmp_path):
+    hs, hens, Xte = _mixed_ensemble(jax.random.PRNGKey(2))
+    Xn = np.asarray(Xte, np.float32)
+    f32 = load_artifact(save_artifact(tmp_path / "f32.mafl", hs, hens))
+    q = load_artifact(
+        save_artifact(tmp_path / "q.mafl", hs, hens, quantize=mode, calibrate=Xn)
+    )
+    assert q.hetero and q.manifest["format_version"] == 3
+    # per-group plans cover the full flatten order: 3 groups' leaves
+    assert len(q.manifest["leaf_codecs"]) == len(jax.tree.flatten(hens)[0])
+    assert ensemble_signature(q.ensemble) == ensemble_signature(f32.ensemble)
+    _assert_votes_identical(
+        lambda a, Xs: hetero.hetero_strong_predict(a.spec, a.ensemble, Xs),
+        f32, q, Xte,
+    )
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_quantized_hetero_committee_artifact(mode, tmp_path):
+    from test_hetero import C
+
+    hs, hens, Xte = _mixed_ensemble(jax.random.PRNGKey(3), committee=True)
+    Xn = np.asarray(Xte, np.float32)
+    f32 = load_artifact(
+        save_artifact(tmp_path / "f32.mafl", hs, hens, committee_size=C)
+    )
+    q = load_artifact(
+        save_artifact(tmp_path / "q.mafl", hs, hens, committee_size=C,
+                      quantize=mode, calibrate=Xn)
+    )
+    assert q.committee and q.committee_size == C
+    _assert_votes_identical(
+        lambda a, Xs: hetero.hetero_strong_predict(
+            a.spec, a.ensemble, Xs, committee=True
+        ),
+        f32, q, Xte,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Manifest hygiene
+# ---------------------------------------------------------------------------
+
+
+def _rewrite_manifest(path, mutate):
+    data = path.read_bytes()
+    header = len(MAGIC) + 4
+    (mlen,) = struct.unpack("<I", data[len(MAGIC) : header])
+    manifest = json.loads(data[header : header + mlen].decode())
+    mutate(manifest)
+    blob = json.dumps(manifest, sort_keys=True).encode()
+    path.write_bytes(
+        MAGIC + struct.pack("<I", len(blob)) + blob + data[header + mlen :]
+    )
+
+
+def test_unknown_leaf_codec_rejected(tmp_path):
+    """An artifact naming a codec this reader doesn't implement must be
+    rejected with the documented ValueError, not misdecoded."""
+    _, spec, ens, X = _small_ensemble("decision_tree", jax.random.PRNGKey(4))
+    path = save_artifact(tmp_path / "q.mafl", spec, ens, quantize="int8",
+                         calibrate=np.asarray(X, np.float32))
+
+    def mutate(manifest):
+        plan = next(p for p in manifest["leaf_codecs"] if p["codec"] != CODEC_RAW)
+        plan["codec"] = "zstd-v9"
+
+    _rewrite_manifest(path, mutate)
+    with pytest.raises(ValueError, match="unknown leaf codec"):
+        load_artifact(path)
+
+
+def test_unknown_codec_rejected_at_encode_and_decode():
+    arr = np.zeros((2, 3), np.float32)
+    with pytest.raises(ValueError, match="unknown leaf codec"):
+        encode_leaf(arr, {"codec": "nope"})
+    with pytest.raises(ValueError, match="unknown leaf codec"):
+        decode_leaf(b"", {"codec": "nope"}, arr.shape, arr.dtype)
+    with pytest.raises(ValueError, match="unknown leaf codec"):
+        encoded_nbytes({"codec": "nope"}, arr.shape, arr.dtype)
+
+
+def test_uneconomic_quantized_leaf_demotes_to_raw():
+    """If calibration promotes every slot, the int8 encoding (full codes
+    section + raw slots) exceeds plain f32 — the saver must ship that
+    leaf raw rather than a bigger 'compressed' artifact."""
+    from repro.core.serialization import CODEC_INT8
+    from repro.serve.artifact import _demote_uneconomic
+
+    leaf = np.zeros((3, 4, 5), np.float32)
+    bloated = [{"codec": CODEC_INT8, "outlier_rows": [], "promoted_slots": [0, 1, 2]}]
+    assert _demote_uneconomic((leaf,), bloated) == [{"codec": CODEC_RAW}]
+    slim = [{"codec": CODEC_INT8, "outlier_rows": [], "promoted_slots": []}]
+    assert _demote_uneconomic((leaf,), slim) == slim
+
+
+def test_quantize_rejects_unknown_mode(tmp_path):
+    _, spec, ens, _ = _small_ensemble("ridge", jax.random.PRNGKey(5))
+    with pytest.raises(ValueError, match="quantize"):
+        save_artifact(tmp_path / "x.mafl", spec, ens, quantize="fp4")
+
+
+def test_uncalibrated_quantize_roundtrips_structure(tmp_path):
+    """quantize without calibrate still writes a loadable artifact (no
+    vote guarantee claimed — the saver never ran the vote check)."""
+    _, spec, ens, _ = _small_ensemble("mlp", jax.random.PRNGKey(6))
+    q = load_artifact(save_artifact(tmp_path / "q.mafl", spec, ens, quantize="int8"))
+    assert ensemble_signature(q.ensemble) == ensemble_signature(ens)

@@ -211,11 +211,13 @@ def test_engine_compile_cache_is_warm_across_batches():
     engine = ServeEngine(learner, spec, ens, batch_size=128)
     engine.predict(np.asarray(X))
     assert engine.stats.batches == 4
-    assert engine.stats.compiles == 1  # one jitted predict per (learner, B)
+    # one program per (learner, B) — possibly borrowed warm from the
+    # process-wide compile cache if an earlier test already built it
+    assert engine.stats.compiles + engine.stats.cache_hits == 1
     # a grown ensemble must NOT recompile (static slot shapes)
     engine.update_ensemble(ens._replace(count=ens.count - 1))
     engine.predict(np.asarray(X))
-    assert engine.stats.compiles == 1
+    assert engine.stats.compiles + engine.stats.cache_hits == 1
 
 
 def test_update_ensemble_rejects_foreign_structure():
@@ -241,10 +243,10 @@ def test_update_ensemble_rejects_foreign_structure():
         engine.update_ensemble(shallow)
 
     # a genuinely matching ensemble still swaps in without recompiling
-    compiles = engine.stats.compiles
+    programs = engine.stats.compiles + engine.stats.cache_hits
     engine.update_ensemble(ens._replace(alpha=ens.alpha * 2.0))
     engine.predict(np.asarray(X))
-    assert engine.stats.compiles == compiles
+    assert engine.stats.compiles + engine.stats.cache_hits == programs
 
 
 # ---------------------------------------------------------------------------

@@ -254,4 +254,6 @@ def test_checkpoint_consumers_fold_only_appended_members(tmp_path):
     assert folded_per_checkpoint == [2, 2, 2]  # never re-folds old members
     assert cache.stats()["members_folded"] == 6
     assert cache.stats()["misses"] == 1  # one residency build, then appends
-    assert engine.stats.compiles == 1  # swaps never recompiled the predict
+    # swaps never recompiled the predict (the one program may come warm
+    # from the process-wide cache)
+    assert engine.stats.compiles + engine.stats.cache_hits == 1

@@ -1,0 +1,259 @@
+"""Fleet-scale serving: the multi-tenant registry, the process-wide
+compile cache, and torn-read hardening of the checkpoint stream.
+
+The economics under test: tenant 2..N of an identical (learner, B)
+structural signature must be compile-free (one XLA program per shape,
+process-wide), checkpoint hot-swaps must never build new programs, and
+a consumer polling ``LATEST`` mid-publish must either resolve a
+complete artifact or raise — never silently serve nothing.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import boosting
+from repro.learners import LearnerSpec
+from repro.serve import (
+    EngineConfig,
+    ModelRegistry,
+    ServeEngine,
+    latest_artifact,
+    load_artifact,
+    publish_artifact,
+)
+from repro.serve import cache_stats, clear_cache
+from repro.serve.artifact import LATEST
+from repro.serve.compile_cache import program_key, spec_identity
+
+from test_serve import HPARAMS, _blobs, _small_ensemble
+
+
+# ---------------------------------------------------------------------------
+# Process-wide compile cache
+# ---------------------------------------------------------------------------
+
+
+def test_identical_tenants_share_one_program():
+    clear_cache()
+    learner, spec, ens, X = _small_ensemble("decision_tree", jax.random.PRNGKey(0))
+    Xn = np.asarray(X, np.float32)
+    want = np.asarray(boosting.strong_predict(learner, spec, ens, X))
+
+    e1 = ServeEngine(learner, spec, ens, batch_size=64)
+    np.testing.assert_array_equal(e1.predict(Xn), want)
+    assert (e1.stats.compiles, e1.stats.cache_hits) == (1, 0)
+
+    # tenants 2..N: same structure, zero compiles
+    for _ in range(3):
+        e = ServeEngine(learner, spec, ens, batch_size=64)
+        np.testing.assert_array_equal(e.predict(Xn), want)
+        assert (e.stats.compiles, e.stats.cache_hits) == (0, 1)
+
+    stats = cache_stats()
+    assert stats["programs"] == 1 and stats["hits"] == 3
+
+
+def test_different_structure_never_shares_a_program():
+    """The key must separate everything the traced program closes over:
+    learner, hparams, batch size, committee — sharing across any of
+    these would serve garbage."""
+    _, spec, _ = (None, None, None)
+    base = LearnerSpec("decision_tree", 6, 3, HPARAMS["decision_tree"])
+    sig = ((), [((3,), "float32")])
+    k = lambda **kw: program_key(base, sig, batch_size=64, committee=False,
+                                 use_pallas=False, **kw)
+    base_key = k()
+    assert base_key == k()  # deterministic
+    other_spec = LearnerSpec("decision_tree", 6, 3, {"depth": 2, "n_bins": 8})
+    assert program_key(other_spec, sig, batch_size=64, committee=False,
+                       use_pallas=False) != base_key
+    assert program_key(base, sig, batch_size=128, committee=False,
+                       use_pallas=False) != base_key
+    assert program_key(base, sig, batch_size=64, committee=True,
+                       use_pallas=False) != base_key
+    assert program_key(base, sig, batch_size=64, committee=False,
+                       use_pallas=False, active_mask=(True, False)) != base_key
+
+
+def test_spec_identity_is_order_insensitive_in_hparams():
+    a = LearnerSpec("ridge", 6, 3, {"l2": 1.0})
+    b = LearnerSpec("ridge", 6, 3, dict(reversed(list({"l2": 1.0}.items()))))
+    assert spec_identity(a) == spec_identity(b)
+
+
+# ---------------------------------------------------------------------------
+# ModelRegistry — many tenants, hot-swap on publish
+# ---------------------------------------------------------------------------
+
+
+def _publish(tmp_path, sub, spec, ens, version, **kw):
+    return publish_artifact(tmp_path / sub, spec, ens, version=version, **kw)
+
+
+def test_registry_multi_tenant_predict_and_stats(tmp_path):
+    clear_cache()
+    learner, spec, ens, X = _small_ensemble("decision_tree", jax.random.PRNGKey(1))
+    Xn = np.asarray(X, np.float32)
+    want = np.asarray(boosting.strong_predict(learner, spec, ens, X))
+    for sub in ("fedA", "fedB", "fedC"):
+        _publish(tmp_path, sub, spec, ens, 1)
+
+    reg = ModelRegistry(config=EngineConfig(batch_size=64))
+    for sub in ("fedA", "fedB", "fedC"):
+        reg.add_tenant(sub, tmp_path / sub)
+    assert reg.tenants() == ["fedA", "fedB", "fedC"]
+    for sub in ("fedA", "fedB", "fedC"):
+        np.testing.assert_array_equal(reg.predict(sub, Xn), want)
+
+    s = reg.stats()
+    per = s["tenants"]
+    # exactly ONE compile across the whole fleet; the rest borrowed warm
+    assert sum(t["compiles"] for t in per.values()) == 1
+    assert sum(t["cache_hits"] for t in per.values()) == 2
+    assert s["compile_cache"]["programs"] == 1
+
+    with pytest.raises(KeyError, match="unknown tenant"):
+        reg.predict("fedZ", Xn)
+    with pytest.raises(ValueError, match="already registered"):
+        reg.add_tenant("fedA", tmp_path / "fedA")
+
+
+def test_registry_hot_swap_on_publish(tmp_path):
+    clear_cache()
+    learner, spec, ens, X = _small_ensemble("ridge", jax.random.PRNGKey(2))
+    Xn = np.asarray(X, np.float32)
+    _publish(tmp_path, "fed", spec, ens, 1)
+    reg = ModelRegistry(config=EngineConfig(batch_size=64))
+    reg.add_tenant("fed", tmp_path / "fed")
+    reg.predict("fed", Xn)
+
+    assert reg.refresh() == {}  # nothing new published
+
+    _, _, ens2, _ = _small_ensemble("ridge", jax.random.PRNGKey(3))
+    _publish(tmp_path, "fed", spec, ens2, 2)
+    assert reg.refresh() == {"fed": 2}
+    want2 = np.asarray(boosting.strong_predict(learner, spec, ens2, X))
+    np.testing.assert_array_equal(reg.predict("fed", Xn), want2)
+    t = reg.stats()["tenants"]["fed"]
+    # the swap reused the warm program: still exactly one program total
+    assert t["swaps"] == 1 and t["rebuilds"] == 0
+    assert t["compiles"] + t["cache_hits"] == 1
+    assert t["version"] == 2
+
+
+def test_registry_rebuilds_on_structural_change(tmp_path):
+    clear_cache()
+    learner, spec, ens, X = _small_ensemble("decision_tree", jax.random.PRNGKey(4))
+    Xn = np.asarray(X, np.float32)
+    _publish(tmp_path, "fed", spec, ens, 1)
+    reg = ModelRegistry(config=EngineConfig(batch_size=64))
+    reg.add_tenant("fed", tmp_path / "fed")
+    reg.predict("fed", Xn)
+
+    # capacity T=5 changes the leaf shapes: update_ensemble must reject
+    # and the registry must rebuild the engine
+    _, spec5, ens5, _ = _small_ensemble("decision_tree", jax.random.PRNGKey(5), T=5)
+    _publish(tmp_path, "fed", spec5, ens5, 2)
+    assert reg.refresh() == {"fed": 2}
+    t = reg.stats()["tenants"]["fed"]
+    assert t["rebuilds"] == 1 and t["swaps"] == 0
+    want = np.asarray(boosting.strong_predict(learner, spec5, ens5, X))
+    np.testing.assert_array_equal(reg.predict("fed", Xn), want)
+
+
+def test_registry_quantized_tenant_shares_f32_programs(tmp_path):
+    """Dequantized leaves keep f32 shapes/dtypes, so a quantized tenant
+    rides the same compiled program as its f32 twin — and serves the
+    same votes."""
+    clear_cache()
+    learner, spec, ens, X = _small_ensemble("gaussian_nb", jax.random.PRNGKey(6))
+    Xn = np.asarray(X, np.float32)
+    _publish(tmp_path, "f32", spec, ens, 1)
+    _publish(tmp_path, "int8", spec, ens, 1, quantize="int8", calibrate=Xn)
+
+    reg = ModelRegistry(config=EngineConfig(batch_size=64))
+    reg.add_tenant("f32", tmp_path / "f32")
+    reg.add_tenant("int8", tmp_path / "int8")
+    np.testing.assert_array_equal(
+        reg.predict("int8", Xn), reg.predict("f32", Xn)
+    )
+    per = reg.stats()["tenants"]
+    # one shared program between the f32 and int8 tenants: whichever
+    # served first compiled it, the other borrowed it warm
+    assert sum(t["compiles"] for t in per.values()) == 1
+    assert sum(t["cache_hits"] for t in per.values()) == 1
+
+    with pytest.raises(ValueError, match="nothing published"):
+        reg.add_tenant("empty", tmp_path / "nowhere")
+
+
+# ---------------------------------------------------------------------------
+# Torn-read hardening of the checkpoint stream
+# ---------------------------------------------------------------------------
+
+
+def test_latest_artifact_none_only_when_nothing_published(tmp_path):
+    assert latest_artifact(tmp_path) is None
+
+
+def test_latest_pointer_to_missing_file_raises(tmp_path):
+    (tmp_path / LATEST).write_text("ensemble_v000042.mafl")
+    with pytest.raises(ValueError, match="does not exist"):
+        latest_artifact(tmp_path)
+
+
+def test_latest_retries_once_through_a_torn_publish(tmp_path):
+    """A pointer naming a not-yet-visible version file resolves on the
+    retry once the file lands — the benign publish interleaving."""
+    _, spec, ens, _ = _small_ensemble("ridge", jax.random.PRNGKey(7))
+    real = publish_artifact(tmp_path, spec, ens, version=1)
+    # simulate the torn state: pointer swapped to v2, file not yet visible
+    (tmp_path / LATEST).write_text("ensemble_v000002.mafl")
+
+    def land():
+        time.sleep(0.02)  # inside latest_artifact's retry window
+        real.rename(tmp_path / "ensemble_v000002.mafl")
+
+    t = threading.Thread(target=land)
+    t.start()
+    try:
+        assert latest_artifact(tmp_path) == tmp_path / "ensemble_v000002.mafl"
+    finally:
+        t.join()
+
+
+def test_interleaved_publish_and_resolve(tmp_path):
+    """A consumer hammering latest_artifact()+load_artifact() while a
+    publisher streams checkpoints must always get a complete artifact
+    with a monotonically non-decreasing version."""
+    learner, spec, ens, X = _small_ensemble("decision_tree", jax.random.PRNGKey(8))
+    versions = list(range(1, 13))
+    publish_artifact(tmp_path, spec, ens, version=versions[0])
+    stop = threading.Event()
+    errors = []
+
+    def publisher():
+        try:
+            for v in versions[1:]:
+                publish_artifact(tmp_path, spec, ens, version=v)
+        except Exception as e:  # pragma: no cover - surfaced below
+            errors.append(e)
+        finally:
+            stop.set()
+
+    t = threading.Thread(target=publisher)
+    t.start()
+    seen = []
+    try:
+        while not stop.is_set() or len(seen) == 0:
+            path = latest_artifact(tmp_path)
+            assert path is not None
+            art = load_artifact(path)  # magic/manifest/crc all validated
+            seen.append(int(art.manifest["publish_version"]))
+    finally:
+        t.join()
+    assert seen == sorted(seen), "versions went backwards"
+    assert seen[-1] == versions[-1]
