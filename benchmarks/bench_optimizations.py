@@ -199,6 +199,10 @@ def main(quick: bool = False, tree_hist_only: bool = False) -> None:
     for row in _binned_fit_ablation(Xs, ys, masks, lspec, k3, rounds, repeats):
         rep.add(row.pop("name"), **row)
 
+    # -- observability overhead: tracing off must be free -------------------
+    for row in _obs_overhead_ablation(Xs, ys, masks, lspec, k3, rounds, repeats):
+        rep.add(row.pop("name"), **row)
+
     # -- SPMD: packed hypothesis broadcast ablation -------------------------
     # One all-gather per round (the whole pytree packed into a single f32
     # wire buffer) vs one all-gather per leaf.  The device count must be
@@ -272,6 +276,99 @@ def _binned_fit_ablation(Xs, ys, masks, lspec, key, rounds, repeats):
             "ms_per_round": round(t / rounds * 1e3, 1),
             "speedup_vs_uncached": round(base / t, 3),
         })
+    return rows
+
+
+def _obs_overhead_ablation(Xs, ys, masks, lspec, key, rounds, repeats):
+    """Steady-state fused AdaBoost.F round time with observability off vs
+    on, adult/C=8 on the oracle dispatch — the same quantity as the
+    committed ``fused_fit+binned_batched`` row:
+
+      obs_off     the production path.  The fused round jits the
+                  ``run_stages`` composition, whose traced jaxpr is
+                  identical to the pre-refactor inline body, and the
+                  disabled tracer's ``span()`` is a shared no-op
+                  singleton — so this row must sit within 5% of the
+                  committed ``fused_fit+binned_batched`` baseline
+                  (``BENCH_optimizations_fig3.json``), asserted in the
+                  row's ``within_5pct_of_committed``;
+      obs_traced  what ``--trace`` costs: each stage jits separately and
+                  blocks on its carry so fit/score/aggregate become real
+                  host-visible phases — the price of phase attribution,
+                  NOT paid unless tracing is enabled.
+    """
+    import jax as _jax
+
+    from repro.core import boosting
+    from repro.learners import get_learner
+    from repro.obs import trace
+
+    learner = get_learner(lspec.name)
+    state = boosting.init_boost_state(learner, lspec, rounds, masks, key, X=Xs)
+
+    rfn = _jax.jit(
+        lambda s: boosting.adaboost_f_round(
+            learner, lspec, s, Xs, ys, masks, batched_fit=True
+        )
+    )
+    staged = [
+        (n, _jax.jit(f))
+        for n, f in boosting.adaboost_f_stages(learner, lspec, batched_fit=True)
+    ]
+
+    def run_off():
+        s = state
+        for _ in range(rounds):
+            s, _m = rfn(s)
+        _jax.block_until_ready(s.weights)
+
+    def run_traced():
+        s = state
+        for _ in range(rounds):
+            carry = {}
+            for n, sfn in staged:
+                with trace.span("round." + n):
+                    s, carry = sfn(s, carry, Xs, ys, masks)
+                    _jax.block_until_ready(carry)
+        _jax.block_until_ready(s.weights)
+
+    committed = None
+    base_path = Path(__file__).resolve().parent.parent / "BENCH_optimizations_fig3.json"
+    if base_path.exists():
+        for r in json.loads(base_path.read_text()):
+            if r["name"] == "fused_fit+binned_batched":
+                committed = r.get("ms_per_round")
+
+    rows = []
+    for name, fn, traced in [("fused_round_obs_off", run_off, False),
+                             ("fused_round_obs_traced", run_traced, True)]:
+        if traced:
+            trace.enable()
+        try:
+            fn()  # warmup: compile outside the timing
+            times = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                fn()
+                times.append(time.perf_counter() - t0)
+        finally:
+            if traced:
+                trace.disable()
+                trace.reset()
+        t = sorted(times)[len(times) // 2]
+        ms = round(t / rounds * 1e3, 1)
+        row = {
+            "name": name,
+            "us_per_call": round(t / rounds * 1e6, 1),
+            "ms_per_round": ms,
+        }
+        if not traced and committed is not None:
+            row["committed_ms_per_round"] = committed
+            row["vs_committed"] = round(ms / committed, 3)
+            row["within_5pct_of_committed"] = bool(ms <= committed * 1.05)
+        if traced and rows:
+            row["overhead_vs_obs_off"] = round(ms / rows[0]["ms_per_round"], 3)
+        rows.append(row)
     return rows
 
 

@@ -54,6 +54,7 @@ import numpy as np
 
 from benchmarks.common import Reporter
 from repro.core import boosting
+from repro.obs import metrics as obs_metrics, trace
 from repro.core.metrics import f1_macro
 from repro.data import get_dataset
 from repro.fl.partition import iid_partition
@@ -172,16 +173,29 @@ def bench_multitenant(rep, learner, spec, ensemble, Xte_np, want, batch) -> None
     n_tenants = 4
     clear_cache()
     reg = _tenant_fleet(n_tenants, spec, ensemble, batch)
-    first_ms = []
+    first_ms, tenant_spans = [], {}
     for i in range(n_tenants):
+        n0 = len(trace.events()) if trace.TRACER.enabled else 0
         t0 = time.perf_counter()
         got = reg.predict(f"fed{i}", Xte_np)
         first_ms.append((time.perf_counter() - t0) * 1e3)
         np.testing.assert_array_equal(got, want)
+        if trace.TRACER.enabled:
+            # the tenant's first predict owns every span in this window
+            # (single-threaded here), so compile cost attributes cleanly
+            spans = trace.events()[n0:]
+            comp = [e for e in spans if e["name"] == "serve.compile"]
+            tenant_spans[f"fed{i}"] = {
+                "compile_ms": round(sum(e["dur"] for e in comp) / 1e3, 3),
+                "compile_cache_hit": all(
+                    e["args"].get("cache_hit") for e in comp
+                ) if comp else None,
+            }
     per = reg.stats()["tenants"]
     stats = cache_stats()
     assert sum(t["compiles"] for t in per.values()) == 1, per
     assert sum(t["cache_hits"] for t in per.values()) == n_tenants - 1, per
+    extra = {"per_tenant": tenant_spans} if tenant_spans else {}
     rep.add(
         "multitenant/compile_sharing",
         tenants=n_tenants,
@@ -192,6 +206,7 @@ def bench_multitenant(rep, learner, spec, ensemble, Xte_np, want, batch) -> None
         cold_first_predict_ms=round(first_ms[0], 2),
         warm_first_predict_ms=round(min(first_ms[1:]), 2),
         batch=batch,
+        **extra,
     )
 
 
@@ -240,23 +255,46 @@ def bench_open_loop(rep, learner, spec, ensemble, Xte_np, want, batch) -> None:
             raise errs[0]
         for out in outs:
             np.testing.assert_array_equal(out, want)
-        lat = np.concatenate([np.asarray(e.stats.request_latencies) for e in engines])
+        # per-engine latency histograms fold into one (same bucket shape);
+        # percentiles carry the histogram's ~5% relative error bound
+        lat = obs_metrics.Histogram()
+        for e in engines:
+            lat.merge(e.stats.request_latencies)
         return producers * n / dt, lat
 
+    qwait = obs_metrics.histogram("mafl_scheduler_queue_wait_seconds")
     solo_rps, solo_lat = run(1)
+    qwait._reset()  # attribute queue wait to the contended run only
+    n0 = len(trace.events()) if trace.TRACER.enabled else 0
     rps, lat = run(n_tenants)
+    extra = {}
+    if trace.TRACER.enabled:
+        # decompose the open-loop p99: time queued behind the dispatch
+        # thread (scheduler wait) vs time in dispatch (pack+predict) vs
+        # compile (zero here — programs come warm from the process cache)
+        spans = trace.events()[n0:]
+        disp = [e["dur"] for e in spans if e["name"] == "serve.dispatch"]
+        comp = [e["dur"] for e in spans if e["name"] == "serve.compile"]
+        extra = dict(
+            queue_wait_p50_ms=round(qwait.percentile(50) * 1e3, 3),
+            queue_wait_p99_ms=round(qwait.percentile(99) * 1e3, 3),
+            dispatch_mean_ms=round(sum(disp) / len(disp) / 1e3, 3) if disp else 0.0,
+            dispatch_spans=len(disp),
+            compile_total_ms=round(sum(comp) / 1e3, 3),
+        )
     rep.add(
         "multitenant/open_loop",
         tenants=n_tenants,
         producers=n_tenants,
         req_per_s=round(rps),
-        p50_ms=round(float(np.percentile(lat, 50)) * 1e3, 3),
-        p99_ms=round(float(np.percentile(lat, 99)) * 1e3, 3),
+        p50_ms=round(lat.percentile(50) * 1e3, 3),
+        p99_ms=round(lat.percentile(99) * 1e3, 3),
         single_producer_req_per_s=round(solo_rps),
-        single_producer_p50_ms=round(float(np.percentile(solo_lat, 50)) * 1e3, 3),
-        single_producer_p99_ms=round(float(np.percentile(solo_lat, 99)) * 1e3, 3),
+        single_producer_p50_ms=round(solo_lat.percentile(50) * 1e3, 3),
+        single_producer_p99_ms=round(solo_lat.percentile(99) * 1e3, 3),
         t_max_ms=t_max_s * 1e3,
         batch=batch,
+        **extra,
     )
 
 
@@ -314,22 +352,22 @@ def main(quick: bool = False, multitenant_only: bool = False) -> None:
                 eng.submit(Xte_np[i : i + 37])
             eng.flush()
             dt = time.perf_counter() - t0
-            lat = eng.stats.request_latencies
+            lat = eng.stats.request_latencies  # bounded histogram (~5% err)
             best = min(best, dt) if best else dt
         n = Xte_np.shape[0]
         rep.add(
             f"{name}/engine",
             us_per_call=best / n * 1e6,
             req_per_s=round(n / best),
-            p50_ms=round(float(np.percentile(lat, 50)) * 1e3, 3),
-            p99_ms=round(float(np.percentile(lat, 99)) * 1e3, 3),
+            p50_ms=round(lat.percentile(50) * 1e3, 3),
+            p99_ms=round(lat.percentile(99) * 1e3, 3),
             batch=batch,
             f1=round(f1, 4),
         )
 
         # -- deadline policy: async dispatch loop, NO flush anywhere ------
         t_max_s = 0.002
-        lat_d, best_d, lone = [], None, None
+        lat_d, best_d, lone = None, None, None
         for _ in range(repeats):
             eng = ServeEngine(art.learner, art.spec, art.ensemble, batch_size=batch)
             eng._fns = engine._fns  # warm compile cache (same (learner, B))
@@ -340,7 +378,9 @@ def main(quick: bool = False, multitenant_only: bool = False) -> None:
                     ids.extend(sched.submit(Xte_np[i : i + 37]))
                 got_d = sched.results(ids, timeout_s=300.0)
                 dt = time.perf_counter() - t0
-                lat_d = list(eng.stats.request_latencies)  # stream only
+                # snapshot the stream-only latency distribution before the
+                # lone request below lands in the same histogram
+                lat_d = obs_metrics.Histogram().merge(eng.stats.request_latencies)
                 # a lone request with the queue idle: answered by the
                 # deadline alone — the "partial batch runs after t_max"
                 # guarantee, measured
@@ -355,8 +395,8 @@ def main(quick: bool = False, multitenant_only: bool = False) -> None:
             f"{name}/engine_deadline",
             us_per_call=best_d / n * 1e6,
             req_per_s=round(n / best_d),
-            p50_ms=round(float(np.percentile(lat_d, 50)) * 1e3, 3),
-            p99_ms=round(float(np.percentile(lat_d, 99)) * 1e3, 3),
+            p50_ms=round(lat_d.percentile(50) * 1e3, 3),
+            p99_ms=round(lat_d.percentile(99) * 1e3, 3),
             t_max_ms=t_max_s * 1e3,
             lone_request_ms=round(lone * 1e3, 3),
             batch=batch,
@@ -399,6 +439,12 @@ def main(quick: bool = False, multitenant_only: bool = False) -> None:
         bench_quantized(rep, quick, dspec, Xtr, ytr, Xte)
 
     # -- fleet-scale sections: many tenants, one process ------------------
+    # spans on from here (full runs AND --multitenant-only): the
+    # committed multitenant rows attribute per-tenant compile cost and
+    # decompose the open-loop p99 into scheduler wait vs dispatch vs
+    # compile.  The per-learner loop above stays untraced so its timed
+    # paths are identical to production serving.
+    trace.enable()
     learner, lspec, state, rfn = _setup(
         "decision_tree", LEARNERS["decision_tree"], rounds, dspec, Xtr, ytr, k2
     )

@@ -178,9 +178,81 @@ def _samme_alpha(eps: jax.Array, n_classes: int) -> jax.Array:
     return jnp.clip(jnp.log((1.0 - eps) / eps) + jnp.log(n_classes - 1.0), -10.0, 10.0)
 
 
+def run_stages(stages, state: BoostState, X, y, mask):
+    """Compose a round's named stages into the full round step.
+
+    Every round below is built from (name, fn) stages with the uniform
+    signature ``fn(state, carry, X, y, mask) -> (state, carry)`` — the
+    final stage leaves the round metrics in ``carry["metrics"]``.  The
+    fused round functions jit THIS composition (the traced jaxpr is
+    identical to the old inline bodies, so the fused hot path is
+    unchanged), while the observability layer jits each stage separately
+    to time fit / score / aggregate as real host-visible phases
+    (``fl/federation.py`` under ``--trace``).
+    """
+    carry: Dict[str, Any] = {}
+    for _, fn in stages:
+        state, carry = fn(state, carry, X, y, mask)
+    return state, carry["metrics"]
+
+
 # ---------------------------------------------------------------------------
 # AdaBoost.F (paper's implemented algorithm)
 # ---------------------------------------------------------------------------
+
+
+def adaboost_f_stages(
+    learner: WeakLearner,
+    spec: LearnerSpec,
+    *,
+    use_pallas: bool = False,
+    batched_fit: bool = True,
+    block_s: int | None = None,
+    block_d: int | None = None,
+):
+    """The AdaBoost.F round as named stages (see :func:`run_stages`)."""
+
+    def fit(state, carry, X, y, mask):
+        key, kfit = jax.random.split(state.key)
+        # step 2: local training, all C fits as one batched tensor program
+        # when the learner supports it (BinnedDataset caches etc. come
+        # from the round-static fit cache)
+        hyps = _local_fits(
+            learner, spec, state.weights, X, y, kfit, state.fit_cache,
+            batched=batched_fit, use_pallas=use_pallas,
+            block_s=block_s, block_d=block_d,
+        )  # [C, ...]
+        return BoostState(state.ensemble, state.weights, key, state.fit_cache), {
+            "hyps": hyps
+        }
+
+    def score(state, carry, X, y, mask):
+        # step 3: predict ONCE per (hypothesis, shard) — every quantity
+        # downstream is a reduction over this tensor, never a second predict
+        preds = scoring.predict_tensor(learner, spec, carry["hyps"], X)  # [C, C, n]
+        errs = scoring.error_matrix(preds, y, state.weights, use_pallas=use_pallas)
+        return state, {**carry, "preds": preds, "errs": errs}
+
+    def aggregate(state, carry, X, y, mask):
+        # step 4 (aggregator): globally-weighted error, best hypothesis, alpha
+        hyps, preds, errs = carry["hyps"], carry["preds"], carry["errs"]
+        eps = jnp.sum(errs, axis=0)  # w globally normalised: sum_i ||w_i|| == 1
+        c = jnp.argmin(eps)
+        alpha = _samme_alpha(eps[c], spec.n_classes)
+        chosen = _take_slot(hyps, c)
+
+        ens = state.ensemble
+        ens = Ensemble(
+            params=_set_slot(ens.params, ens.count, chosen),
+            alpha=ens.alpha.at[ens.count].set(alpha),
+            count=ens.count + 1,
+        )
+        mis = scoring.chosen_mis(preds, y, c)  # row slice of preds
+        w = scoring.update_weights(state.weights, mis, mask, alpha, use_pallas=use_pallas)
+        metrics = {"epsilon": eps[c], "alpha": alpha, "chosen": c.astype(jnp.int32)}
+        return BoostState(ens, w, state.key, state.fit_cache), {"metrics": metrics}
+
+    return [("fit", fit), ("score", score), ("aggregate", aggregate)]
 
 
 def adaboost_f_round(
@@ -196,36 +268,13 @@ def adaboost_f_round(
     block_s: int | None = None,
     block_d: int | None = None,
 ) -> Tuple[BoostState, Dict[str, jax.Array]]:
-    key, kfit = jax.random.split(state.key)
-    w = state.weights
-
-    # step 2: local training, all C fits as one batched tensor program
-    # when the learner supports it (BinnedDataset caches etc. come from
-    # the round-static fit cache)
-    hyps = _local_fits(
-        learner, spec, w, X, y, kfit, state.fit_cache,
-        batched=batched_fit, use_pallas=use_pallas, block_s=block_s, block_d=block_d,
-    )  # [C, ...]
-    # step 3: predict ONCE per (hypothesis, shard) — every quantity below
-    # is a reduction over this tensor, never a second predict
-    preds = scoring.predict_tensor(learner, spec, hyps, X)  # [C, C, n]
-    errs = scoring.error_matrix(preds, y, w, use_pallas=use_pallas)  # [C, C]
-    # step 4 (aggregator): globally-weighted error, best hypothesis, alpha
-    eps = jnp.sum(errs, axis=0)  # weights are globally normalised: sum_i ||w_i|| == 1
-    c = jnp.argmin(eps)
-    alpha = _samme_alpha(eps[c], spec.n_classes)
-    chosen = _take_slot(hyps, c)
-
-    ens = state.ensemble
-    ens = Ensemble(
-        params=_set_slot(ens.params, ens.count, chosen),
-        alpha=ens.alpha.at[ens.count].set(alpha),
-        count=ens.count + 1,
+    return run_stages(
+        adaboost_f_stages(
+            learner, spec, use_pallas=use_pallas, batched_fit=batched_fit,
+            block_s=block_s, block_d=block_d,
+        ),
+        state, X, y, mask,
     )
-    mis = scoring.chosen_mis(preds, y, c)  # row slice of preds
-    w = scoring.update_weights(w, mis, mask, alpha, use_pallas=use_pallas)
-    metrics = {"epsilon": eps[c], "alpha": alpha, "chosen": c.astype(jnp.int32)}
-    return BoostState(ens, w, key, state.fit_cache), metrics
 
 
 # ---------------------------------------------------------------------------
@@ -239,34 +288,66 @@ def _committee_predict(learner, spec, committee, X):
     return jnp.argmax(tally, axis=-1).astype(jnp.int32)
 
 
+def distboost_f_stages(
+    learner, spec, *,
+    use_pallas: bool = False, batched_fit: bool = True,
+    block_s: int | None = None, block_d: int | None = None,
+):
+    """The DistBoost.F round as named stages (see :func:`run_stages`)."""
+
+    def fit(state, carry, X, y, mask):
+        key, kfit = jax.random.split(state.key)
+        committee = _local_fits(
+            learner, spec, state.weights, X, y, kfit, state.fit_cache,
+            batched=batched_fit, use_pallas=use_pallas,
+            block_s=block_s, block_d=block_d,
+        )  # [C, ...]
+        return BoostState(state.ensemble, state.weights, key, state.fit_cache), {
+            "committee": committee
+        }
+
+    def score(state, carry, X, y, mask):
+        committee = carry["committee"]
+
+        def mis_one(Xi, yi):
+            return (
+                _committee_predict(learner, spec, committee, Xi) != yi
+            ).astype(jnp.float32)
+
+        mis = jax.vmap(mis_one)(X, y)  # [C, n] — the round's ONLY predict pass
+        return state, {**carry, "mis": mis}
+
+    def aggregate(state, carry, X, y, mask):
+        committee, mis = carry["committee"], carry["mis"]
+        w = state.weights
+        eps = jnp.sum(w * mis)
+        alpha = _samme_alpha(eps, spec.n_classes)
+
+        ens = state.ensemble
+        ens = Ensemble(
+            params=_set_slot(ens.params, ens.count, committee),
+            alpha=ens.alpha.at[ens.count].set(alpha),
+            count=ens.count + 1,
+        )
+        w = scoring.update_weights(w, mis, mask, alpha, use_pallas=use_pallas)
+        metrics = {"epsilon": eps, "alpha": alpha, "chosen": jnp.zeros((), jnp.int32)}
+        return BoostState(ens, w, state.key, state.fit_cache), {"metrics": metrics}
+
+    return [("fit", fit), ("score", score), ("aggregate", aggregate)]
+
+
 def distboost_f_round(
     learner, spec, state, X, y, mask, *,
     use_pallas: bool = False, batched_fit: bool = True,
     block_s: int | None = None, block_d: int | None = None,
 ):
-    key, kfit = jax.random.split(state.key)
-    w = state.weights
-    committee = _local_fits(
-        learner, spec, w, X, y, kfit, state.fit_cache,
-        batched=batched_fit, use_pallas=use_pallas, block_s=block_s, block_d=block_d,
-    )  # [C, ...]
-
-    def mis_one(Xi, yi):
-        return (_committee_predict(learner, spec, committee, Xi) != yi).astype(jnp.float32)
-
-    mis = jax.vmap(mis_one)(X, y)  # [C, n] — the round's ONLY predict pass
-    eps = jnp.sum(w * mis)
-    alpha = _samme_alpha(eps, spec.n_classes)
-
-    ens = state.ensemble
-    ens = Ensemble(
-        params=_set_slot(ens.params, ens.count, committee),
-        alpha=ens.alpha.at[ens.count].set(alpha),
-        count=ens.count + 1,
+    return run_stages(
+        distboost_f_stages(
+            learner, spec, use_pallas=use_pallas, batched_fit=batched_fit,
+            block_s=block_s, block_d=block_d,
+        ),
+        state, X, y, mask,
     )
-    w = scoring.update_weights(w, mis, mask, alpha, use_pallas=use_pallas)
-    metrics = {"epsilon": eps, "alpha": alpha, "chosen": jnp.zeros((), jnp.int32)}
-    return BoostState(ens, w, key, state.fit_cache), metrics
 
 
 # ---------------------------------------------------------------------------
@@ -337,6 +418,41 @@ def preweak_f_predictions(learner, spec, hyp_space, X) -> jax.Array:
     return scoring.predict_tensor(learner, spec, hyp_space, X)
 
 
+def preweak_f_stages(learner, spec, hyp_space, *,
+                     pred_cache: jax.Array | None = None,
+                     use_pallas: bool = False):
+    """The PreWeak.F round as named stages (see :func:`run_stages`).
+
+    No fit stage — the hypothesis space is pre-trained at setup."""
+
+    def score(state, carry, X, y, mask):
+        preds = pred_cache if pred_cache is not None else preweak_f_predictions(
+            learner, spec, hyp_space, X
+        )  # [C, C*T, n]
+        errs = scoring.error_matrix(preds, y, state.weights, use_pallas=use_pallas)
+        return state, {"preds": preds, "errs": errs}
+
+    def aggregate(state, carry, X, y, mask):
+        preds, errs = carry["preds"], carry["errs"]
+        eps = jnp.sum(errs, axis=0)
+        c = jnp.argmin(eps)
+        alpha = _samme_alpha(eps[c], spec.n_classes)
+        chosen = _take_slot(hyp_space, c)
+
+        ens = state.ensemble
+        ens = Ensemble(
+            params=_set_slot(ens.params, ens.count, chosen),
+            alpha=ens.alpha.at[ens.count].set(alpha),
+            count=ens.count + 1,
+        )
+        mis = scoring.chosen_mis(preds, y, c)  # row slice of preds
+        w = scoring.update_weights(state.weights, mis, mask, alpha, use_pallas=use_pallas)
+        metrics = {"epsilon": eps[c], "alpha": alpha, "chosen": c.astype(jnp.int32)}
+        return BoostState(ens, w, state.key, state.fit_cache), {"metrics": metrics}
+
+    return [("score", score), ("aggregate", aggregate)]
+
+
 def preweak_f_round(learner, spec, state, hyp_space, X, y, mask, *,
                     pred_cache: jax.Array | None = None, use_pallas: bool = False):
     """Rounds loop only on steps 3-4 (red dotted line in Fig. 1).
@@ -345,27 +461,12 @@ def preweak_f_round(learner, spec, state, hyp_space, X, y, mask, *,
     a pure weighted reduction over the cached predictions; without it the
     space is re-predicted each round (the pre-optimisation behaviour).
     """
-    key = state.key
-    w = state.weights
-    preds = pred_cache if pred_cache is not None else preweak_f_predictions(
-        learner, spec, hyp_space, X
-    )  # [C, C*T, n]
-    errs = scoring.error_matrix(preds, y, w, use_pallas=use_pallas)  # [C, C*T]
-    eps = jnp.sum(errs, axis=0)
-    c = jnp.argmin(eps)
-    alpha = _samme_alpha(eps[c], spec.n_classes)
-    chosen = _take_slot(hyp_space, c)
-
-    ens = state.ensemble
-    ens = Ensemble(
-        params=_set_slot(ens.params, ens.count, chosen),
-        alpha=ens.alpha.at[ens.count].set(alpha),
-        count=ens.count + 1,
+    return run_stages(
+        preweak_f_stages(
+            learner, spec, hyp_space, pred_cache=pred_cache, use_pallas=use_pallas
+        ),
+        state, X, y, mask,
     )
-    mis = scoring.chosen_mis(preds, y, c)  # row slice of preds
-    w = scoring.update_weights(w, mis, mask, alpha, use_pallas=use_pallas)
-    metrics = {"epsilon": eps[c], "alpha": alpha, "chosen": c.astype(jnp.int32)}
-    return BoostState(ens, w, key, state.fit_cache), metrics
 
 
 # ---------------------------------------------------------------------------
@@ -373,27 +474,60 @@ def preweak_f_round(learner, spec, state, hyp_space, X, y, mask, *,
 # ---------------------------------------------------------------------------
 
 
+def bagging_stages(
+    learner, spec, *,
+    use_pallas: bool = False, batched_fit: bool = True,
+    block_s: int | None = None, block_d: int | None = None,
+):
+    """The federated-bagging round as named stages (see :func:`run_stages`).
+
+    No score stage — bagging skips the whole scoring reduction; the
+    kernel flags only steer the fit."""
+
+    def fit(state, carry, X, y, mask):
+        key, kfit, kpick = jax.random.split(state.key, 3)
+        w = mask / jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)  # local-uniform
+        hyps = _local_fits(
+            learner, spec, w, X, y, kfit, state.fit_cache,
+            batched=batched_fit, use_pallas=use_pallas,
+            block_s=block_s, block_d=block_d,
+        )
+        return BoostState(state.ensemble, state.weights, key, state.fit_cache), {
+            "hyps": hyps, "kpick": kpick
+        }
+
+    def aggregate(state, carry, X, y, mask):
+        hyps, kpick = carry["hyps"], carry["kpick"]
+        c = jax.random.randint(kpick, (), 0, X.shape[0])  # rotate members round-robin-ish
+        ens = state.ensemble
+        ens = Ensemble(
+            params=_set_slot(ens.params, ens.count, _take_slot(hyps, c)),
+            alpha=ens.alpha.at[ens.count].set(1.0),  # unweighted vote
+            count=ens.count + 1,
+        )
+        metrics = {
+            "epsilon": jnp.zeros(()), "alpha": jnp.ones(()),
+            "chosen": c.astype(jnp.int32),
+        }
+        return BoostState(ens, state.weights, state.key, state.fit_cache), {
+            "metrics": metrics
+        }
+
+    return [("fit", fit), ("aggregate", aggregate)]
+
+
 def bagging_round(
     learner, spec, state, X, y, mask, *,
     use_pallas: bool = False, batched_fit: bool = True,
     block_s: int | None = None, block_d: int | None = None,
 ):
-    # no scoring reduction in bagging — the kernel flags only steer the fit
-    key, kfit, kpick = jax.random.split(state.key, 3)
-    w = mask / jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)  # local-uniform
-    hyps = _local_fits(
-        learner, spec, w, X, y, kfit, state.fit_cache,
-        batched=batched_fit, use_pallas=use_pallas, block_s=block_s, block_d=block_d,
+    return run_stages(
+        bagging_stages(
+            learner, spec, use_pallas=use_pallas, batched_fit=batched_fit,
+            block_s=block_s, block_d=block_d,
+        ),
+        state, X, y, mask,
     )
-    c = jax.random.randint(kpick, (), 0, X.shape[0])  # rotate members round-robin-ish
-    ens = state.ensemble
-    ens = Ensemble(
-        params=_set_slot(ens.params, ens.count, _take_slot(hyps, c)),
-        alpha=ens.alpha.at[ens.count].set(1.0),  # unweighted vote
-        count=ens.count + 1,
-    )
-    metrics = {"epsilon": jnp.zeros(()), "alpha": jnp.ones(()), "chosen": c.astype(jnp.int32)}
-    return BoostState(ens, state.weights, key, state.fit_cache), metrics
 
 
 # ---------------------------------------------------------------------------
@@ -425,4 +559,14 @@ ROUND_FNS: Dict[str, Callable] = {
     "adaboost_f": adaboost_f_round,
     "distboost_f": distboost_f_round,
     "bagging": bagging_round,
+}
+
+# Stage factories for the traced path (fl/federation.py under --trace):
+# same computation as ROUND_FNS, but each named stage can be jitted and
+# timed on its own.  PreWeak.F is absent — its stage factory needs the
+# hypothesis space, so the federation calls preweak_f_stages directly.
+ROUND_STAGES: Dict[str, Callable] = {
+    "adaboost_f": adaboost_f_stages,
+    "distboost_f": distboost_f_stages,
+    "bagging": bagging_stages,
 }

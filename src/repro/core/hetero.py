@@ -64,6 +64,7 @@ from repro.core.boosting import (
     _take_slot,
     ensemble_votes,
     init_ensemble,
+    run_stages,
 )
 from repro.learners.base import LearnerSpec, WeakLearner, get_learner
 
@@ -356,6 +357,54 @@ def _committee_tally(learners, hspec, params_by_group, X) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
+def hetero_adaboost_f_stages(
+    hspec: HeterogeneousSpec,
+    *,
+    use_pallas: bool = False,
+    batched_fit: bool = True,
+    block_s: Optional[int] = None,
+    block_d: Optional[int] = None,
+):
+    """Grouped AdaBoost.F round as named stages (see
+    :func:`repro.core.boosting.run_stages`)."""
+    learners = resolve(hspec)
+
+    def fit(state, carry, X, y, mask):
+        key, kfit = jax.random.split(state.key)
+        hyps = _grouped_local_fits(
+            hspec, learners, state.weights, X, y, kfit, state.fit_cache,
+            batched=batched_fit, use_pallas=use_pallas,
+            block_s=block_s, block_d=block_d,
+        )
+        return BoostState(state.ensemble, state.weights, key, state.fit_cache), {
+            "hyps": hyps
+        }
+
+    def score(state, carry, X, y, mask):
+        preds = _grouped_predict_tensor(hspec, learners, carry["hyps"], X)  # [C, H, n]
+        errs = scoring.error_matrix(preds, y, state.weights, use_pallas=use_pallas)
+        return state, {**carry, "preds": preds, "errs": errs}
+
+    def aggregate(state, carry, X, y, mask):
+        hyps, preds, errs = carry["hyps"], carry["preds"], carry["errs"]
+        eps = jnp.sum(errs, axis=0)
+        c = jnp.argmin(eps)
+        alpha = _samme_alpha(eps[c], hspec.n_classes)
+
+        owner, local, collab = _hyp_maps(hspec)
+        ens = _append_chosen(state.ensemble, hyps, owner, local, c, alpha)
+        mis = scoring.chosen_mis(preds, y, c)
+        w = scoring.update_weights(state.weights, mis, mask, alpha, use_pallas=use_pallas)
+        metrics = {
+            "epsilon": eps[c],
+            "alpha": alpha,
+            "chosen": jnp.asarray(collab)[c].astype(jnp.int32),
+        }
+        return BoostState(ens, w, state.key, state.fit_cache), {"metrics": metrics}
+
+    return [("fit", fit), ("score", score), ("aggregate", aggregate)]
+
+
 def hetero_adaboost_f_round(
     hspec: HeterogeneousSpec,
     state: BoostState,
@@ -368,30 +417,66 @@ def hetero_adaboost_f_round(
     block_s: Optional[int] = None,
     block_d: Optional[int] = None,
 ):
-    learners = resolve(hspec)
-    key, kfit = jax.random.split(state.key)
-    w = state.weights
-
-    hyps = _grouped_local_fits(
-        hspec, learners, w, X, y, kfit, state.fit_cache,
-        batched=batched_fit, use_pallas=use_pallas, block_s=block_s, block_d=block_d,
+    return run_stages(
+        hetero_adaboost_f_stages(
+            hspec, use_pallas=use_pallas, batched_fit=batched_fit,
+            block_s=block_s, block_d=block_d,
+        ),
+        state, X, y, mask,
     )
-    preds = _grouped_predict_tensor(hspec, learners, hyps, X)  # [C, H, n]
-    errs = scoring.error_matrix(preds, y, w, use_pallas=use_pallas)  # [C, H]
-    eps = jnp.sum(errs, axis=0)
-    c = jnp.argmin(eps)
-    alpha = _samme_alpha(eps[c], hspec.n_classes)
 
-    owner, local, collab = _hyp_maps(hspec)
-    ens = _append_chosen(state.ensemble, hyps, owner, local, c, alpha)
-    mis = scoring.chosen_mis(preds, y, c)
-    w = scoring.update_weights(w, mis, mask, alpha, use_pallas=use_pallas)
-    metrics = {
-        "epsilon": eps[c],
-        "alpha": alpha,
-        "chosen": jnp.asarray(collab)[c].astype(jnp.int32),
-    }
-    return BoostState(ens, w, key, state.fit_cache), metrics
+
+def hetero_distboost_f_stages(
+    hspec, *,
+    use_pallas: bool = False, batched_fit: bool = True,
+    block_s: Optional[int] = None, block_d: Optional[int] = None,
+):
+    """Grouped DistBoost.F round as named stages."""
+    learners = resolve(hspec)
+
+    def fit(state, carry, X, y, mask):
+        key, kfit = jax.random.split(state.key)
+        committees = _grouped_local_fits(
+            hspec, learners, state.weights, X, y, kfit, state.fit_cache,
+            batched=batched_fit, use_pallas=use_pallas,
+            block_s=block_s, block_d=block_d,
+        )
+        return BoostState(state.ensemble, state.weights, key, state.fit_cache), {
+            "committees": committees
+        }
+
+    def score(state, carry, X, y, mask):
+        committees = carry["committees"]
+
+        def mis_one(Xi, yi):
+            tally = _committee_tally(learners, hspec, committees, Xi)
+            pred = jnp.argmax(tally, axis=-1).astype(jnp.int32)
+            return (pred != yi).astype(jnp.float32)
+
+        mis = jax.vmap(mis_one)(X, y)  # [C, n] — the round's ONLY predict pass
+        return state, {**carry, "mis": mis}
+
+    def aggregate(state, carry, X, y, mask):
+        committees, mis = carry["committees"], carry["mis"]
+        w = state.weights
+        eps = jnp.sum(w * mis)
+        alpha = _samme_alpha(eps, hspec.n_classes)
+
+        # the round hypothesis is the WHOLE mixed committee: every group
+        # appends its seat block, counts advance in lockstep
+        ens = tuple(
+            Ensemble(
+                params=_set_slot(e.params, e.count, committees[g]),
+                alpha=e.alpha.at[e.count].set(alpha),
+                count=e.count + 1,
+            )
+            for g, e in enumerate(state.ensemble)
+        )
+        w = scoring.update_weights(w, mis, mask, alpha, use_pallas=use_pallas)
+        metrics = {"epsilon": eps, "alpha": alpha, "chosen": jnp.zeros((), jnp.int32)}
+        return BoostState(ens, w, state.key, state.fit_cache), {"metrics": metrics}
+
+    return [("fit", fit), ("score", score), ("aggregate", aggregate)]
 
 
 def hetero_distboost_f_round(
@@ -399,36 +484,13 @@ def hetero_distboost_f_round(
     use_pallas: bool = False, batched_fit: bool = True,
     block_s: Optional[int] = None, block_d: Optional[int] = None,
 ):
-    learners = resolve(hspec)
-    key, kfit = jax.random.split(state.key)
-    w = state.weights
-    committees = _grouped_local_fits(
-        hspec, learners, w, X, y, kfit, state.fit_cache,
-        batched=batched_fit, use_pallas=use_pallas, block_s=block_s, block_d=block_d,
+    return run_stages(
+        hetero_distboost_f_stages(
+            hspec, use_pallas=use_pallas, batched_fit=batched_fit,
+            block_s=block_s, block_d=block_d,
+        ),
+        state, X, y, mask,
     )
-
-    def mis_one(Xi, yi):
-        tally = _committee_tally(learners, hspec, committees, Xi)
-        pred = jnp.argmax(tally, axis=-1).astype(jnp.int32)
-        return (pred != yi).astype(jnp.float32)
-
-    mis = jax.vmap(mis_one)(X, y)  # [C, n] — the round's ONLY predict pass
-    eps = jnp.sum(w * mis)
-    alpha = _samme_alpha(eps, hspec.n_classes)
-
-    # the round hypothesis is the WHOLE mixed committee: every group
-    # appends its seat block, counts advance in lockstep
-    ens = tuple(
-        Ensemble(
-            params=_set_slot(e.params, e.count, committees[g]),
-            alpha=e.alpha.at[e.count].set(alpha),
-            count=e.count + 1,
-        )
-        for g, e in enumerate(state.ensemble)
-    )
-    w = scoring.update_weights(w, mis, mask, alpha, use_pallas=use_pallas)
-    metrics = {"epsilon": eps, "alpha": alpha, "chosen": jnp.zeros((), jnp.int32)}
-    return BoostState(ens, w, key, state.fit_cache), metrics
 
 
 def hetero_preweak_f_setup(hspec, state, X, y, mask, T: int):
@@ -459,29 +521,92 @@ def hetero_preweak_f_predictions(hspec, spaces, X) -> jax.Array:
     return _grouped_predict_tensor(hspec, resolve(hspec), spaces, X)
 
 
+def hetero_preweak_f_stages(
+    hspec, spaces, *,
+    pred_cache: Optional[jax.Array] = None, use_pallas: bool = False,
+):
+    """Grouped PreWeak.F round as named stages (no fit — the mixed
+    hypothesis space is pre-trained at setup)."""
+
+    def score(state, carry, X, y, mask):
+        preds = (
+            pred_cache
+            if pred_cache is not None
+            else hetero_preweak_f_predictions(hspec, spaces, X)
+        )
+        errs = scoring.error_matrix(preds, y, state.weights, use_pallas=use_pallas)
+        return state, {"preds": preds, "errs": errs}
+
+    def aggregate(state, carry, X, y, mask):
+        preds, errs = carry["preds"], carry["errs"]
+        eps = jnp.sum(errs, axis=0)
+        c = jnp.argmin(eps)
+        alpha = _samme_alpha(eps[c], hspec.n_classes)
+
+        T = preds.shape[1] // hspec.n_collaborators
+        owner, local, _ = _hyp_maps(hspec, per_member=T)
+        ens = _append_chosen(state.ensemble, spaces, owner, local, c, alpha)
+        mis = scoring.chosen_mis(preds, y, c)
+        w = scoring.update_weights(state.weights, mis, mask, alpha, use_pallas=use_pallas)
+        metrics = {"epsilon": eps[c], "alpha": alpha, "chosen": c.astype(jnp.int32)}
+        return BoostState(ens, w, state.key, state.fit_cache), {"metrics": metrics}
+
+    return [("score", score), ("aggregate", aggregate)]
+
+
 def hetero_preweak_f_round(
     hspec, state, spaces, X, y, mask, *,
     pred_cache: Optional[jax.Array] = None, use_pallas: bool = False,
 ):
-    key = state.key
-    w = state.weights
-    preds = (
-        pred_cache
-        if pred_cache is not None
-        else hetero_preweak_f_predictions(hspec, spaces, X)
+    return run_stages(
+        hetero_preweak_f_stages(
+            hspec, spaces, pred_cache=pred_cache, use_pallas=use_pallas
+        ),
+        state, X, y, mask,
     )
-    errs = scoring.error_matrix(preds, y, w, use_pallas=use_pallas)
-    eps = jnp.sum(errs, axis=0)
-    c = jnp.argmin(eps)
-    alpha = _samme_alpha(eps[c], hspec.n_classes)
 
-    T = preds.shape[1] // hspec.n_collaborators
-    owner, local, _ = _hyp_maps(hspec, per_member=T)
-    ens = _append_chosen(state.ensemble, spaces, owner, local, c, alpha)
-    mis = scoring.chosen_mis(preds, y, c)
-    w = scoring.update_weights(w, mis, mask, alpha, use_pallas=use_pallas)
-    metrics = {"epsilon": eps[c], "alpha": alpha, "chosen": c.astype(jnp.int32)}
-    return BoostState(ens, w, key, state.fit_cache), metrics
+
+def hetero_bagging_stages(
+    hspec, *,
+    use_pallas: bool = False, batched_fit: bool = True,
+    block_s: Optional[int] = None, block_d: Optional[int] = None,
+):
+    """Grouped federated-bagging round as named stages (no score — the
+    scoring reduction is skipped entirely)."""
+    learners = resolve(hspec)
+
+    def fit(state, carry, X, y, mask):
+        key, kfit, kpick = jax.random.split(state.key, 3)
+        w = mask / jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)  # local-uniform
+        hyps = _grouped_local_fits(
+            hspec, learners, w, X, y, kfit, state.fit_cache,
+            batched=batched_fit, use_pallas=use_pallas,
+            block_s=block_s, block_d=block_d,
+        )
+        return BoostState(state.ensemble, state.weights, key, state.fit_cache), {
+            "hyps": hyps, "kpick": kpick
+        }
+
+    def aggregate(state, carry, X, y, mask):
+        hyps, kpick = carry["hyps"], carry["kpick"]
+        c = jax.random.randint(kpick, (), 0, hspec.n_collaborators)  # collaborator index
+        # collaborator -> (owner group, group-local rank): the collaborator-
+        # indexed view of the _hyp_maps tables
+        owner = np.asarray(hspec.assignment, np.int32)
+        rank = np.zeros(hspec.n_collaborators, np.int32)
+        for g in range(hspec.n_groups):
+            for r, i in enumerate(hspec.members(g)):
+                rank[i] = r
+        ens = _append_chosen(state.ensemble, hyps, owner, rank, c, 1.0)
+        metrics = {
+            "epsilon": jnp.zeros(()), "alpha": jnp.ones(()),
+            "chosen": c.astype(jnp.int32),
+        }
+        return BoostState(ens, state.weights, state.key, state.fit_cache), {
+            "metrics": metrics
+        }
+
+    return [("fit", fit), ("aggregate", aggregate)]
 
 
 def hetero_bagging_round(
@@ -489,32 +614,27 @@ def hetero_bagging_round(
     use_pallas: bool = False, batched_fit: bool = True,
     block_s: Optional[int] = None, block_d: Optional[int] = None,
 ):
-    learners = resolve(hspec)
-    key, kfit, kpick = jax.random.split(state.key, 3)
-    w = mask / jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)  # local-uniform
-    hyps = _grouped_local_fits(
-        hspec, learners, w, X, y, kfit, state.fit_cache,
-        batched=batched_fit, use_pallas=use_pallas, block_s=block_s, block_d=block_d,
+    return run_stages(
+        hetero_bagging_stages(
+            hspec, use_pallas=use_pallas, batched_fit=batched_fit,
+            block_s=block_s, block_d=block_d,
+        ),
+        state, X, y, mask,
     )
-    c = jax.random.randint(kpick, (), 0, hspec.n_collaborators)  # collaborator index
-    # collaborator -> (owner group, group-local rank): the collaborator-
-    # indexed view of the _hyp_maps tables
-    owner = np.asarray(hspec.assignment, np.int32)
-    rank = np.zeros(hspec.n_collaborators, np.int32)
-    for g in range(hspec.n_groups):
-        for r, i in enumerate(hspec.members(g)):
-            rank[i] = r
-    ens = _append_chosen(state.ensemble, hyps, owner, rank, c, 1.0)
-    metrics = {
-        "epsilon": jnp.zeros(()), "alpha": jnp.ones(()), "chosen": c.astype(jnp.int32),
-    }
-    return BoostState(ens, state.weights, key, state.fit_cache), metrics
 
 
 HETERO_ROUND_FNS = {
     "adaboost_f": hetero_adaboost_f_round,
     "distboost_f": hetero_distboost_f_round,
     "bagging": hetero_bagging_round,
+}
+
+# Traced-path stage factories (see boosting.ROUND_STAGES); PreWeak.F is
+# handled by the federation calling hetero_preweak_f_stages directly.
+HETERO_ROUND_STAGES = {
+    "adaboost_f": hetero_adaboost_f_stages,
+    "distboost_f": hetero_distboost_f_stages,
+    "bagging": hetero_bagging_stages,
 }
 
 

@@ -19,6 +19,8 @@ from __future__ import annotations
 import time
 from typing import TYPE_CHECKING, Any, Callable, Dict, List
 
+from repro.obs import trace
+
 if TYPE_CHECKING:  # pragma: no cover
     from repro.fl.federation import Federation
 
@@ -71,7 +73,8 @@ class SynchBarrier:
 def run_round(fed: "Federation", round_idx: int) -> None:
     """Execute one federated round's task list with barriers."""
     for task in fed.plan.tasks:
-        TASK_EXECUTORS[task.kind](fed, round_idx, task.args)
+        with trace.span("task." + task.kind, round=round_idx):
+            TASK_EXECUTORS[task.kind](fed, round_idx, task.args)
         for _ in range(fed.n_collaborators):
             fed.barrier.report_done()
         fed.barrier.wait_all()

@@ -25,6 +25,23 @@ from repro.core.plan import Plan
 from repro.core.serialization import deserialize, serialize, wire_format, wire_size
 from repro.core.tensordb import TensorDB, TensorKey
 from repro.learners.base import LearnerSpec, get_learner
+from repro.obs import metrics as obs_metrics, trace
+
+# Process-wide federation metric families (see docs/ARCHITECTURE.md,
+# "Observability").  Declared at import time so any metrics dump covers
+# them even before the first round runs.
+_M_ROUNDS = obs_metrics.counter(
+    "mafl_federation_rounds_total", "Federated rounds completed (all paths)."
+)
+_M_COMM = obs_metrics.counter(
+    "mafl_federation_comm_bytes_total",
+    "Wire bytes between collaborators and the aggregator: measured on the "
+    "interpreted path, modelled from artifact shapes on the fused path.",
+)
+_M_ROUND_SECONDS = obs_metrics.histogram(
+    "mafl_federation_round_seconds",
+    "Wall-clock seconds per federated round (history-row averages).",
+)
 
 
 @dataclasses.dataclass
@@ -107,6 +124,9 @@ class Federation:
         )
         self.end_round_sleep_s = 0.0 if opt.fast_barrier else max(plan.aggregator.sleep_s * 10, 0.1)
         self.comm_bytes = 0
+        # (wall time, comm_bytes, round) at the previous history row —
+        # feeds the rows' round_seconds / comm_bytes deltas
+        self._row_marker = (time.perf_counter(), 0, 0)
         self.history: List[Dict[str, float]] = []
         self._round_scratch: Dict[str, Any] = {}
         self._fused_state: Optional[boosting.BoostState] = None
@@ -116,9 +136,13 @@ class Federation:
         self.published: List[Path] = []  # checkpoint artifacts, oldest first
 
     # -- communication accounting -----------------------------------------
+    def _account_comm(self, nbytes: int) -> None:
+        self.comm_bytes += nbytes
+        _M_COMM.inc(nbytes)
+
     def send(self, tree: Any) -> List[bytes]:
         bufs = serialize(tree, packed=self.plan.optimizations.packed_serialization)
-        self.comm_bytes += sum(len(b) for b in bufs)
+        self._account_comm(sum(len(b) for b in bufs))
         return bufs
 
     def recv(self, bufs: List[bytes], fmt) -> Any:
@@ -178,9 +202,24 @@ class Federation:
                 on_checkpoint=on_checkpoint,
             )
         self._eval_every = eval_every
+        self._row_marker = (time.perf_counter(), self.comm_bytes, 0)
         for r in range(rounds):
-            protocol.run_round(self, r)
+            with trace.span("round", round=r, algorithm=self.plan.algorithm):
+                protocol.run_round(self, r)
+            _M_ROUNDS.inc()
         return self.history
+
+    def _history_extras(self, r: int) -> Dict[str, float]:
+        """round_seconds / comm_bytes deltas since the previous history
+        row (per-round averages when rows are sparser than rounds — no
+        extra device syncs are added to measure them)."""
+        now = time.perf_counter()
+        t0, c0, r0 = self._row_marker
+        k = max(r + 1 - r0, 1)
+        self._row_marker = (now, self.comm_bytes, r + 1)
+        dt = (now - t0) / k
+        _M_ROUND_SECONDS.observe(dt)
+        return {"round_seconds": dt, "comm_bytes": float(self.comm_bytes - c0)}
 
     def _publish_checkpoint(self, state: boosting.BoostState, round_idx: int,
                             publish_dir: str, on_checkpoint) -> None:
@@ -200,6 +239,86 @@ class Federation:
             on_checkpoint(path, round_idx + 1)
 
     # -- fused fast path: the whole round as one jitted program ------------
+    def _fused_comm_model(self, state, *, setup_tree=None) -> tuple:
+        """(setup_bytes, per_round_bytes) for the fused path.
+
+        The fused round never serializes, so the wire traffic is modelled
+        analytically from artifact shapes (``wire_size`` is shape-only —
+        no device sync), mirroring the interpreted path's accounting:
+        per round every collaborator uploads its local hypothesis, the
+        aggregator broadcasts the hypothesis space for validation (C-1
+        extra wire copies, as in ``weak_learners_validate``) and then the
+        (chosen hypothesis, alpha) pair (``adaboost_update``).  PreWeak.F
+        ships the whole C*T space once at setup and only (alpha, index)
+        per round; bagging skips both broadcasts.
+        """
+        C = self.n_collaborators
+        ens = state.ensemble
+        # homogeneous Ensemble is itself a NamedTuple — only a plain tuple
+        # is the heterogeneous per-group collection
+        parts = ens if not isinstance(ens, boosting.Ensemble) else (ens,)
+        # one ensemble slot's bytes: the slot buffers' leading dim is the
+        # capacity, so a slot is total/capacity
+        h = sum(wire_size(e.params) // max(e.alpha.shape[0], 1) for e in parts)
+        alg = self.plan.algorithm
+        if alg == "preweak_f":
+            setup = wire_size(setup_tree) * C if setup_tree is not None else 0
+            return setup, 16 * C  # (alpha, chosen index) broadcast
+        if alg == "distboost_f":
+            # the slot IS the whole committee: its upload is the C local
+            # fits; validation re-broadcasts it to every collaborator
+            return 0, h * (1 + C) + 8 * C
+        if alg == "bagging":
+            return 0, C * h  # uploads only — no scoring, no weight update
+        return 0, C * h + C * h * (C - 1) + (h + 8) * C  # adaboost_f
+
+    def _fused_loop(
+        self, rounds: int, eval_every: int, state, Xs, ys, masks,
+        round_fn, staged, evaluate, per_round_comm: int,
+        publish_every, publish_dir, on_checkpoint,
+    ) -> List[Dict[str, float]]:
+        """The round loop shared by both fused paths.
+
+        ``staged`` is the traced-mode alternative to ``round_fn``: the
+        round's named stages, each jitted separately so fit/score/
+        aggregate are real host-visible phases (``jax.block_until_ready``
+        per stage).  It is only built when tracing is enabled — disabled
+        runs execute the identical single jitted ``round_fn`` as before.
+        """
+        self._row_marker = (time.perf_counter(), self.comm_bytes, 0)
+        for r in range(rounds):
+            with trace.span("round", round=r, algorithm=self.plan.algorithm):
+                if staged is not None:
+                    carry: Dict[str, Any] = {}
+                    for name, sfn in staged:
+                        with trace.span("round." + name, round=r):
+                            state, carry = sfn(state, carry, Xs, ys, masks)
+                            jax.block_until_ready(carry)
+                    metrics = carry["metrics"]
+                else:
+                    state, metrics = round_fn(state, Xs, ys, masks)
+                self._account_comm(per_round_comm)
+                _M_ROUNDS.inc()
+                if (r + 1) % eval_every == 0 or r == rounds - 1:
+                    with trace.span("round.eval", round=r):
+                        f1 = evaluate(state)
+                    self.history.append(
+                        {
+                            "round": r,
+                            "f1": float(f1),
+                            **{k: float(v) for k, v in metrics.items()},
+                            **self._history_extras(r),
+                        }
+                    )
+                if publish_every and ((r + 1) % publish_every == 0 or r == rounds - 1):
+                    # the fused state owns the slot-buffer ensemble: each
+                    # checkpoint is the same capacity with a larger count, so
+                    # the artifact stream is append-only by construction
+                    with trace.span("round.publish", round=r):
+                        self._publish_checkpoint(state, r, publish_dir, on_checkpoint)
+        self._fused_state = state
+        return self.history
+
     def _run_fused(
         self, rounds: int, eval_every: int,
         *, publish_every: Optional[int] = None, publish_dir: Optional[str] = None,
@@ -210,6 +329,8 @@ class Federation:
         masks = jnp.stack([c.mask for c in self.collaborators])
         opt = self.plan.optimizations
         up = opt.use_pallas
+        traced = trace.TRACER.enabled
+        stages = None
         committee = self.n_collaborators if self.plan.algorithm == "distboost_f" else None
         state = boosting.init_boost_state(
             self.learner, self.spec, rounds, masks, self.key,
@@ -221,22 +342,32 @@ class Federation:
                     self.learner, self.spec, s, X, y, m, rounds
                 )
             )
-            hyp_space, state = setup(state, Xs, ys, masks)
-            # The C*T hypothesis space is static across rounds: predict it
-            # once at setup and every round becomes a pure reduction.
-            cache = None
-            if opt.cache_predictions:
-                cache = jax.jit(
-                    lambda hs, X: boosting.preweak_f_predictions(
-                        self.learner, self.spec, hs, X
-                    )
-                )(hyp_space, Xs)
+            with trace.span("preweak.setup", rounds=rounds):
+                hyp_space, state = setup(state, Xs, ys, masks)
+                # The C*T hypothesis space is static across rounds: predict
+                # it once at setup and every round becomes a pure reduction.
+                cache = None
+                if opt.cache_predictions:
+                    cache = jax.jit(
+                        lambda hs, X: boosting.preweak_f_predictions(
+                            self.learner, self.spec, hs, X
+                        )
+                    )(hyp_space, Xs)
+                if traced:
+                    jax.block_until_ready(hyp_space)
             round_fn = jax.jit(
                 lambda s, X, y, m: boosting.preweak_f_round(
                     self.learner, self.spec, s, hyp_space, X, y, m,
                     pred_cache=cache, use_pallas=up,
                 )
             )
+            if traced:
+                stages = boosting.preweak_f_stages(
+                    self.learner, self.spec, hyp_space,
+                    pred_cache=cache, use_pallas=up,
+                )
+            setup_bytes, per_round = self._fused_comm_model(state, setup_tree=hyp_space)
+            self._account_comm(setup_bytes)
         else:
             base = boosting.ROUND_FNS[self.plan.algorithm]
             round_fn = jax.jit(
@@ -246,6 +377,14 @@ class Federation:
                     block_s=opt.tree_block_s, block_d=opt.tree_block_d,
                 )
             )
+            if traced:
+                stages = boosting.ROUND_STAGES[self.plan.algorithm](
+                    self.learner, self.spec, use_pallas=up,
+                    batched_fit=opt.batched_fit,
+                    block_s=opt.tree_block_s, block_d=opt.tree_block_d,
+                )
+            _, per_round = self._fused_comm_model(state)
+        staged = [(n, jax.jit(f)) for n, f in stages] if stages is not None else None
         committee_pred = self.plan.algorithm == "distboost_f"
         if opt.cache_predictions:
             # incremental eval: running vote tally; each eval adds only the
@@ -257,31 +396,28 @@ class Federation:
                     committee=committee_pred,
                 )
             )
+
+            def evaluate(state):
+                nonlocal tally
+                tally = tally_fn(state.ensemble, tally)
+                pred = scoring.tally_predict(tally)
+                return f1_macro(self.y_test, pred, self.spec.n_classes)
+
         else:
             predict = jax.jit(
                 lambda ens, X: boosting.strong_predict(
                     self.learner, self.spec, ens, X, committee=committee_pred
                 )
             )
-        for r in range(rounds):
-            state, metrics = round_fn(state, Xs, ys, masks)
-            if (r + 1) % eval_every == 0 or r == rounds - 1:
-                if opt.cache_predictions:
-                    tally = tally_fn(state.ensemble, tally)
-                    pred = scoring.tally_predict(tally)
-                else:
-                    pred = predict(state.ensemble, self.X_test)
-                f1 = f1_macro(self.y_test, pred, self.spec.n_classes)
-                self.history.append(
-                    {"round": r, "f1": float(f1), **{k: float(v) for k, v in metrics.items()}}
-                )
-            if publish_every and ((r + 1) % publish_every == 0 or r == rounds - 1):
-                # the fused state owns the slot-buffer ensemble: each
-                # checkpoint is the same capacity with a larger count, so
-                # the artifact stream is append-only by construction
-                self._publish_checkpoint(state, r, publish_dir, on_checkpoint)
-        self._fused_state = state
-        return self.history
+
+            def evaluate(state):
+                pred = predict(state.ensemble, self.X_test)
+                return f1_macro(self.y_test, pred, self.spec.n_classes)
+
+        return self._fused_loop(
+            rounds, eval_every, state, Xs, ys, masks, round_fn, staged,
+            evaluate, per_round, publish_every, publish_dir, on_checkpoint,
+        )
 
     # -- fused fast path, heterogeneous: per-collaborator learner types ----
     def _run_fused_hetero(
@@ -300,6 +436,8 @@ class Federation:
         masks = jnp.stack([c.mask for c in self.collaborators])
         opt = self.plan.optimizations
         up = opt.use_pallas
+        traced = trace.TRACER.enabled
+        stages = None
         committee = self.plan.algorithm == "distboost_f"
         state = hetero.init_hetero_boost_state(
             hspec, rounds, masks, self.key, committee=committee, X=Xs,
@@ -310,17 +448,26 @@ class Federation:
                     hspec, s, X, y, m, rounds
                 )
             )
-            spaces, state = setup(state, Xs, ys, masks)
-            cache = None
-            if opt.cache_predictions:
-                cache = jax.jit(
-                    lambda sp, X: hetero.hetero_preweak_f_predictions(hspec, sp, X)
-                )(spaces, Xs)
+            with trace.span("preweak.setup", rounds=rounds):
+                spaces, state = setup(state, Xs, ys, masks)
+                cache = None
+                if opt.cache_predictions:
+                    cache = jax.jit(
+                        lambda sp, X: hetero.hetero_preweak_f_predictions(hspec, sp, X)
+                    )(spaces, Xs)
+                if traced:
+                    jax.block_until_ready(spaces)
             round_fn = jax.jit(
                 lambda s, X, y, m: hetero.hetero_preweak_f_round(
                     hspec, s, spaces, X, y, m, pred_cache=cache, use_pallas=up,
                 )
             )
+            if traced:
+                stages = hetero.hetero_preweak_f_stages(
+                    hspec, spaces, pred_cache=cache, use_pallas=up,
+                )
+            setup_bytes, per_round = self._fused_comm_model(state, setup_tree=spaces)
+            self._account_comm(setup_bytes)
         else:
             base = hetero.HETERO_ROUND_FNS[self.plan.algorithm]
             round_fn = jax.jit(
@@ -330,6 +477,13 @@ class Federation:
                     block_s=opt.tree_block_s, block_d=opt.tree_block_d,
                 )
             )
+            if traced:
+                stages = hetero.HETERO_ROUND_STAGES[self.plan.algorithm](
+                    hspec, use_pallas=up, batched_fit=opt.batched_fit,
+                    block_s=opt.tree_block_s, block_d=opt.tree_block_d,
+                )
+            _, per_round = self._fused_comm_model(state)
+        staged = [(n, jax.jit(f)) for n, f in stages] if stages is not None else None
         if opt.cache_predictions:
             tallies = hetero.init_hetero_tally(
                 hspec, self.X_test.shape[0], committee=committee
@@ -339,28 +493,28 @@ class Federation:
                     hspec, ens, tl, self.X_test, committee=committee,
                 )
             )
+
+            def evaluate(state):
+                nonlocal tallies
+                tallies = tally_fn(state.ensemble, tallies)
+                pred = hetero.hetero_tally_predict(tallies)
+                return f1_macro(self.y_test, pred, hspec.n_classes)
+
         else:
             predict = jax.jit(
                 lambda ens, X: hetero.hetero_strong_predict(
                     hspec, ens, X, committee=committee
                 )
             )
-        for r in range(rounds):
-            state, metrics = round_fn(state, Xs, ys, masks)
-            if (r + 1) % eval_every == 0 or r == rounds - 1:
-                if opt.cache_predictions:
-                    tallies = tally_fn(state.ensemble, tallies)
-                    pred = hetero.hetero_tally_predict(tallies)
-                else:
-                    pred = predict(state.ensemble, self.X_test)
-                f1 = f1_macro(self.y_test, pred, hspec.n_classes)
-                self.history.append(
-                    {"round": r, "f1": float(f1), **{k: float(v) for k, v in metrics.items()}}
-                )
-            if publish_every and ((r + 1) % publish_every == 0 or r == rounds - 1):
-                self._publish_checkpoint(state, r, publish_dir, on_checkpoint)
-        self._fused_state = state
-        return self.history
+
+            def evaluate(state):
+                pred = predict(state.ensemble, self.X_test)
+                return f1_macro(self.y_test, pred, hspec.n_classes)
+
+        return self._fused_loop(
+            rounds, eval_every, state, Xs, ys, masks, round_fn, staged,
+            evaluate, per_round, publish_every, publish_dir, on_checkpoint,
+        )
 
     # -- ensemble as used by the interpreted path --------------------------
     def strong_predict_host(self, X) -> jax.Array:
@@ -402,8 +556,9 @@ def _weak_learners_validate(fed: Federation, r: int, args: Dict[str, Any]) -> No
     entries = fed.aggregator.db.query(name="weak_hypothesis", round=r)
     entries.sort(key=lambda kv: kv[0].origin)
     hyps = [fed.recv(bufs, fed._wire_fmt) for _, bufs in entries]
-    fed.comm_bytes += sum(sum(len(b) for b in bufs) for _, bufs in entries) * (
-        fed.n_collaborators - 1
+    fed._account_comm(
+        sum(sum(len(b) for b in bufs) for _, bufs in entries)
+        * (fed.n_collaborators - 1)
     )  # n-1 extra copies on the wire
     # predict-once batched scoring: stack the hypothesis space and score
     # each collaborator's shard with ONE jitted call (a kernel-backed
@@ -444,7 +599,7 @@ def _adaboost_update(fed: Federation, r: int, args: Dict[str, Any]) -> None:
     fed.aggregator.ensemble.append((chosen, alpha))
     fed.aggregator.db.put(TensorKey("adaboost_coeff", "aggregator", r), alpha)
     # broadcast (chosen hypothesis, alpha); collaborators update weights
-    fed.comm_bytes += (wire_size(chosen) + 8) * fed.n_collaborators
+    fed._account_comm((wire_size(chosen) + 8) * fed.n_collaborators)
     up = fed.plan.optimizations.use_pallas
     pred_rows = fed._round_scratch.get("preds")
     total = 0.0
@@ -468,7 +623,9 @@ def _adaboost_validate(fed: Federation, r: int, args: Dict[str, Any]) -> None:
     pred = fed.strong_predict_host(fed.X_test)
     f1 = float(f1_macro(fed.y_test, pred, fed.spec.n_classes))
     last = fed.aggregator.ensemble[-1] if fed.aggregator.ensemble else (None, 0.0)
-    fed.history.append({"round": r, "f1": f1, "alpha": last[1]})
+    fed.history.append(
+        {"round": r, "f1": f1, "alpha": last[1], **fed._history_extras(r)}
+    )
     fed.aggregator.db.put(TensorKey("metric/f1", "aggregator", r), f1)
 
 
@@ -484,10 +641,10 @@ def _fedavg_train(fed: Federation, r: int) -> None:
     locals_, sizes = [], []
     for c in fed.collaborators:
         fed.key, kt = jax.random.split(fed.key)
-        fed.comm_bytes += wire_size(fed.aggregator.global_params)  # broadcast
+        fed._account_comm(wire_size(fed.aggregator.global_params))  # broadcast
         p = fed.learner.warm_fit(fed.spec, fed.aggregator.global_params, c.X, c.y, c.mask, kt)
         c.params = p
-        fed.comm_bytes += wire_size(p)  # upload
+        fed._account_comm(wire_size(p))  # upload
         locals_.append(p)
         sizes.append(float(jnp.sum(c.mask)))
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *locals_)
@@ -500,7 +657,12 @@ def _agg_model_validation(fed: Federation, r: int, args) -> None:
         return
     pred = fed.learner.predict(fed.spec, fed.aggregator.global_params, fed.X_test)
     fed.history.append(
-        {"round": r, "f1": float(f1_macro(fed.y_test, pred, fed.spec.n_classes)), "alpha": 0.0}
+        {
+            "round": r,
+            "f1": float(f1_macro(fed.y_test, pred, fed.spec.n_classes)),
+            "alpha": 0.0,
+            **fed._history_extras(r),
+        }
     )
 
 

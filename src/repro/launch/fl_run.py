@@ -30,6 +30,7 @@ from repro.data import get_dataset
 from repro.fl.federation import Federation
 from repro.fl.partition import partition
 from repro.learners import LearnerSpec
+from repro.obs import metrics as obs_metrics, trace
 
 
 def default_hparams(name: str, depth: int = 4) -> dict:
@@ -62,8 +63,18 @@ def main(argv=None):
                     help="route step-3/4 scoring through the Pallas kernels "
                          "(TPU; interpret mode elsewhere)")
     ap.add_argument("--sharded", action="store_true")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record per-round phase spans (fit/score/aggregate/"
+                         "eval/publish) and write a Chrome-trace JSON loadable "
+                         "in Perfetto or chrome://tracing; also prints a "
+                         "phase-time summary table")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the process metrics registry (counters/gauges/"
+                         "histograms) in Prometheus text exposition format")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.trace:
+        trace.enable()
 
     key = jax.random.PRNGKey(args.seed)
     k1, k2, k3 = jax.random.split(key, 3)
@@ -124,9 +135,28 @@ def main(argv=None):
     history = fed.run(eval_every=args.eval_every)
     dt = time.time() - t0
     for h in history:
-        print(f"round {h['round']:4d}  f1 {h['f1']:.4f}  alpha {h.get('alpha', 0):.3f}")
+        extra = ""
+        if "round_seconds" in h:
+            extra = (f"  {1e3 * h['round_seconds']:8.1f} ms/round"
+                     f"  {h.get('comm_bytes', 0) / 1e3:9.1f} kB")
+        print(f"round {h['round']:4d}  f1 {h['f1']:.4f}  "
+              f"alpha {h.get('alpha', 0):.3f}{extra}")
     print(f"total {dt:.1f}s  comm {fed.comm_bytes/1e6:.2f} MB  final F1 {history[-1]['f1']:.4f}")
+    _finish_obs(args)
     return history
+
+
+def _finish_obs(args):
+    """Export the trace / metrics dump the run accumulated (shared by
+    fl_run and serve_fl: both expose --trace/--metrics-out)."""
+    if getattr(args, "trace", None):
+        trace.export(args.trace)
+        print(trace.format_summary("phase-time summary"))
+        print(f"trace written to {args.trace} "
+              "(open in Perfetto or chrome://tracing)")
+    if getattr(args, "metrics_out", None):
+        obs_metrics.dump(args.metrics_out)
+        print(f"metrics written to {args.metrics_out} (Prometheus text format)")
 
 
 def _run_sharded(args, lspec, Xs, ys, masks, Xte, yte, key):

@@ -43,13 +43,10 @@ from repro.core.hetero import HeterogeneousSpec
 from repro.core.metrics import f1_macro
 from repro.data import get_dataset
 from repro.fl.partition import iid_partition
-from repro.launch.fl_run import default_hparams
+from repro.launch.fl_run import _finish_obs, default_hparams
 from repro.learners import LearnerSpec, get_learner
+from repro.obs import trace
 from repro.serve import ServeEngine, ShardVoteCache, load_artifact, save_artifact
-
-
-def _percentile(xs, q):
-    return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
 
 
 def train_ensemble(args, lspec, learner, Xtr, ytr, key):
@@ -116,10 +113,12 @@ def serve(args, learner, lspec, ensemble, Xte, yte, *, committee=False):
     pred, dt = _drive_engine(args, engine, Xte)
     n = Xte.shape[0]
     f1 = float(f1_macro(yte, pred, lspec.n_classes))
+    # request_latencies is a bounded log-spaced histogram: percentiles
+    # carry a ~5% relative error (see obs/metrics.py), constant memory
     lat = engine.stats.request_latencies
     print(
         f"engine[{args.policy}]: {n} requests in {dt:.3f}s = {n/dt:.0f} req/s  "
-        f"p50 {1e3*_percentile(lat, 50):.2f}ms p99 {1e3*_percentile(lat, 99):.2f}ms  "
+        f"p50 {1e3*lat.percentile(50):.2f}ms p99 {1e3*lat.percentile(99):.2f}ms  "
         f"({engine.stats.batches} batches, {engine.stats.padded_rows} padded rows)  "
         f"F1 {f1:.4f}"
     )
@@ -250,8 +249,18 @@ def main(argv=None):
                          "payloads, calibrated on the served split so its "
                          "votes stay bit-identical to the f32 ensemble")
     ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record serve/compile/dispatch spans and write a "
+                         "Chrome-trace JSON (Perfetto / chrome://tracing); "
+                         "prints a phase-time summary table")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the process metrics registry (engine, "
+                         "scheduler, registry, compile-cache and vote-cache "
+                         "families) in Prometheus text exposition format")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.trace:
+        trace.enable()
 
     key = jax.random.PRNGKey(args.seed)
     k1, k2 = jax.random.split(key)
@@ -275,7 +284,9 @@ def main(argv=None):
         if not args.publish_dir:
             ap.error("--publish-every requires --publish-dir")
         lspec, learner = build_spec()
-        return publish_and_consume(args, lspec, learner, Xtr, ytr, Xte, yte, k2)
+        f1 = publish_and_consume(args, lspec, learner, Xtr, ytr, Xte, yte, k2)
+        _finish_obs(args)
+        return f1
 
     committee = False
     if args.load:
@@ -301,7 +312,9 @@ def main(argv=None):
                 # calibrated for — reload and serve the reloaded ensemble
                 ensemble = load_artifact(p).ensemble
 
-    return serve(args, learner, lspec, ensemble, Xte, yte, committee=committee)
+    f1 = serve(args, learner, lspec, ensemble, Xte, yte, committee=committee)
+    _finish_obs(args)
+    return f1
 
 
 if __name__ == "__main__":

@@ -1,0 +1,31 @@
+"""Unified observability: span tracing + process-wide metrics.
+
+Two small, dependency-free primitives every layer reports into:
+
+  * ``repro.obs.trace``   — structured spans (``trace.span("round.fit",
+    round=r)``) exported as Perfetto-loadable Chrome trace JSON; a
+    shared no-op fast path while disabled;
+  * ``repro.obs.metrics`` — counters / gauges / bounded log-spaced
+    histograms in one registry with a Prometheus-text dump.
+
+The federation loop, the serving engine/scheduler/registry/caches and
+the launchers all thread through here — see docs/ARCHITECTURE.md
+("Observability") for the span taxonomy and metric families.
+"""
+from repro.obs import metrics, trace
+from repro.obs.metrics import REGISTRY, Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import NOOP_SPAN, TRACER, Tracer, span
+
+__all__ = [
+    "metrics",
+    "trace",
+    "span",
+    "Tracer",
+    "TRACER",
+    "NOOP_SPAN",
+    "MetricsRegistry",
+    "REGISTRY",
+    "Counter",
+    "Gauge",
+    "Histogram",
+]

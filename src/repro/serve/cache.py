@@ -33,6 +33,24 @@ import numpy as np
 from repro.core import hetero, scoring
 from repro.core.hetero import HeterogeneousSpec
 from repro.learners.base import LearnerSpec, WeakLearner
+from repro.obs import metrics as obs_metrics, trace
+
+# Process-wide vote-cache metric families; per-instance ``stats()``
+# keeps its dict shape over the instance counters.
+_M_HITS = obs_metrics.counter(
+    "mafl_vote_cache_hits_total", "Requests answered from a resident tally alone."
+)
+_M_PARTIAL = obs_metrics.counter(
+    "mafl_vote_cache_partial_hits_total",
+    "Requests that folded only newly appended members.",
+)
+_M_MISSES = obs_metrics.counter(
+    "mafl_vote_cache_misses_total", "First-contact requests (full tally build)."
+)
+_M_FOLDED = obs_metrics.counter(
+    "mafl_vote_cache_members_folded_total",
+    "Member-predict passes actually run by vote caches.",
+)
 
 
 @dataclasses.dataclass
@@ -168,13 +186,14 @@ class ShardVoteCache:
 
     def register(self, key: Hashable, X) -> None:
         """Pin a shard resident with an empty tally (no predicts yet)."""
-        fp = _fingerprint(X)
-        X = jnp.asarray(X, jnp.float32)
-        self._shards[key] = _Resident(
-            X=X,
-            tally=self._empty_tally(X.shape[0]),
-            fingerprint=fp,
-        )
+        with trace.span("vote_cache.register", rows=int(np.asarray(X).shape[0])):
+            fp = _fingerprint(X)
+            X = jnp.asarray(X, jnp.float32)
+            self._shards[key] = _Resident(
+                X=X,
+                tally=self._empty_tally(X.shape[0]),
+                fingerprint=fp,
+            )
 
     def __contains__(self, key: Hashable) -> bool:
         return key in self._shards
@@ -194,14 +213,19 @@ class ShardVoteCache:
         new = self._count - shard.counted
         if new == 0:
             self.hits += 1
+            _M_HITS.inc()
         else:
             if shard.counted == 0:
                 self.misses += 1  # full tally build (first contact)
+                _M_MISSES.inc()
             else:
                 self.partial_hits += 1  # folds only the appended members
-            shard.tally = self._refresh_fn()(self.ensemble, shard.tally, shard.X)
+                _M_PARTIAL.inc()
+            with trace.span("vote_cache.refresh", new_members=new):
+                shard.tally = self._refresh_fn()(self.ensemble, shard.tally, shard.X)
             shard.counted = self._count
             self.members_folded += new
+            _M_FOLDED.inc(new)
         return np.asarray(self._argmax(shard.tally))
 
     def _alpha_prefix_crc(self, ensemble, counts: tuple) -> int:

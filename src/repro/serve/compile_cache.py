@@ -33,11 +33,23 @@ from typing import Any, Callable, Dict, Tuple
 
 from repro.core.hetero import HeterogeneousSpec
 from repro.learners.base import LearnerSpec
+from repro.obs import metrics as obs_metrics, trace
 
 _LOCK = threading.Lock()
 _CACHE: Dict[tuple, Callable] = {}
-_HITS = 0
-_MISSES = 0
+
+# the cache's counters ARE registry metrics; cache_stats() is a view
+_M_HITS = obs_metrics.counter(
+    "mafl_compile_cache_hits_total",
+    "Program lookups served warm from the process-wide compile cache.",
+)
+_M_MISSES = obs_metrics.counter(
+    "mafl_compile_cache_misses_total",
+    "Program lookups that had to trace/compile.",
+)
+_M_PROGRAMS = obs_metrics.gauge(
+    "mafl_compile_cache_programs", "Compiled programs resident in the cache."
+)
 
 
 def spec_identity(spec: LearnerSpec | HeterogeneousSpec) -> tuple:
@@ -96,35 +108,38 @@ def get_or_build(key: tuple, build: Callable[[], Callable]) -> Tuple[Callable, b
     builders of the same key both compile but converge on one cached
     program (last write wins; the programs are interchangeable).
     """
-    global _HITS, _MISSES
     with _LOCK:
         fn = _CACHE.get(key)
         if fn is not None:
-            _HITS += 1
+            _M_HITS.inc()
             return fn, True
-        _MISSES += 1
-    fn = build()
+        _M_MISSES.inc()
+    with trace.span("compile_cache.build"):
+        fn = build()
     with _LOCK:
         _CACHE[key] = fn
+        _M_PROGRAMS.set(len(_CACHE))
     return fn, False
 
 
 def cache_stats() -> dict:
-    """Process-wide counters: programs resident, hits, misses, hit rate."""
+    """Process-wide counters: programs resident, hits, misses, hit rate —
+    a dict view over the ``mafl_compile_cache_*`` registry metrics."""
     with _LOCK:
-        total = _HITS + _MISSES
+        hits, misses = int(_M_HITS.value), int(_M_MISSES.value)
+        total = hits + misses
         return {
             "programs": len(_CACHE),
-            "hits": _HITS,
-            "misses": _MISSES,
-            "hit_rate": (_HITS / total) if total else 0.0,
+            "hits": hits,
+            "misses": misses,
+            "hit_rate": (hits / total) if total else 0.0,
         }
 
 
 def clear_cache() -> None:
     """Drop every cached program and zero the counters (tests/benches)."""
-    global _HITS, _MISSES
     with _LOCK:
         _CACHE.clear()
-        _HITS = 0
-        _MISSES = 0
+        _M_HITS._reset()
+        _M_MISSES._reset()
+        _M_PROGRAMS.set(0)

@@ -62,13 +62,37 @@ from repro.core import boosting, hetero, scoring
 from repro.core.hetero import HeterogeneousSpec
 from repro.kernels import ops
 from repro.learners.base import LearnerSpec, WeakLearner
+from repro.obs import metrics as obs_metrics, trace
 from repro.serve import compile_cache
 from repro.serve.artifact import ensemble_signature
 
 
-# Rolling reservoir size for latency samples: enough for stable p99 at
-# any traffic level while keeping a long-lived engine's memory bounded.
-STATS_WINDOW = 100_000
+# Process-wide engine metric families: every engine reports into these in
+# addition to its per-instance ``EngineStats``, so one Prometheus dump
+# covers the whole fleet (see docs/ARCHITECTURE.md, "Observability").
+_M_REQUESTS = obs_metrics.counter(
+    "mafl_engine_requests_total", "Rows admitted across all engines."
+)
+_M_BATCHES = obs_metrics.counter(
+    "mafl_engine_batches_total", "Static batches dispatched across all engines."
+)
+_M_PADDED = obs_metrics.counter(
+    "mafl_engine_padded_rows_total", "Padding rows dispatched across all engines."
+)
+_M_COMPILES = obs_metrics.counter(
+    "mafl_engine_compiles_total", "Predict programs built (process-wide cache misses)."
+)
+_M_CACHE_HITS = obs_metrics.counter(
+    "mafl_engine_cache_hits_total",
+    "Predict programs borrowed warm from the process-wide compile cache.",
+)
+_M_BATCH_SECONDS = obs_metrics.histogram(
+    "mafl_engine_batch_seconds", "Per-batch dispatch wall seconds (all engines)."
+)
+_M_REQ_LATENCY = obs_metrics.histogram(
+    "mafl_engine_request_latency_seconds",
+    "Per-request submit-to-result seconds (all engines).",
+)
 
 
 # -- compiled-predict builders (module-level: the process-wide cache must
@@ -178,13 +202,17 @@ class EngineStats:
     # programs this engine needed but another engine had already built —
     # the per-tenant view of the process-wide compile cache
     cache_hits: int = 0
-    batch_seconds: Deque[float] = dataclasses.field(
-        default_factory=lambda: collections.deque(maxlen=STATS_WINDOW)
+    # fixed-memory log-spaced histograms (~200 buckets each) instead of
+    # the former 100k-sample raw-float deques: ``len()`` is the sample
+    # count, ``.percentile(p)`` estimates quantiles with relative error
+    # bounded by the bucket growth factor (≈5%, see obs/metrics.py)
+    batch_seconds: obs_metrics.Histogram = dataclasses.field(
+        default_factory=obs_metrics.Histogram
     )
-    # per-request seconds from submit() to result availability (scheduler
-    # path) — a rolling window, not the full history
-    request_latencies: Deque[float] = dataclasses.field(
-        default_factory=lambda: collections.deque(maxlen=STATS_WINDOW)
+    # per-request seconds from submit() to result availability
+    # (scheduler path)
+    request_latencies: obs_metrics.Histogram = dataclasses.field(
+        default_factory=obs_metrics.Histogram
     )
 
 
@@ -340,11 +368,15 @@ class ServeEngine:
                 _build_homogeneous_predict, self.learner, self.spec,
                 self.committee, self.use_pallas,
             )
-        fn, hit = compile_cache.get_or_build(key, build)
+        with trace.span("serve.compile", batch_size=B) as sp:
+            fn, hit = compile_cache.get_or_build(key, build)
+            sp.set(cache_hit=hit)
         if hit:
             self.stats.cache_hits += 1
+            _M_CACHE_HITS.inc()
         else:
             self.stats.compiles += 1
+            _M_COMPILES.inc()
         self._fns[local_key] = fn
         return fn
 
@@ -357,11 +389,16 @@ class ServeEngine:
         """One static [B, d] batch; returns the n_valid un-padded answers."""
         B = Xb.shape[0]
         t0 = time.perf_counter()
-        out = self._fn(B)(self.ensemble, Xb)
-        out = np.asarray(out)  # device sync = response ready
-        self.stats.batch_seconds.append(time.perf_counter() - t0)
+        with trace.span("serve.batch", batch_size=B, n_valid=n_valid):
+            out = self._fn(B)(self.ensemble, Xb)
+            out = np.asarray(out)  # device sync = response ready
+        dt = time.perf_counter() - t0
+        self.stats.batch_seconds.observe(dt)
+        _M_BATCH_SECONDS.observe(dt)
         self.stats.batches += 1
+        _M_BATCHES.inc()
         self.stats.padded_rows += B - n_valid
+        _M_PADDED.inc(B - n_valid)
         return out[:n_valid]
 
     def _pack(self, rows: np.ndarray) -> jax.Array:
@@ -376,6 +413,7 @@ class ServeEngine:
         """Serve a whole [m, d] matrix through static batches."""
         X = np.asarray(X, np.float32)
         self.stats.requests += X.shape[0]
+        _M_REQUESTS.inc(X.shape[0])
         out = [
             self._run_batch(
                 self._pack(X[i : i + self.batch_size]),
@@ -397,6 +435,7 @@ class ServeEngine:
             ids.append(self._next_id)
             self._next_id += 1
         self.stats.requests += len(ids)
+        _M_REQUESTS.inc(len(ids))
         while len(self._queue) >= self.batch_size:
             self._dispatch([self._queue.popleft() for _ in range(self.batch_size)])
         return ids
@@ -418,7 +457,8 @@ class ServeEngine:
         done = time.perf_counter()
         for (rid, _, t_submit), p in zip(entries, preds):
             self.results[rid] = int(p)
-            self.stats.request_latencies.append(done - t_submit)
+            self.stats.request_latencies.observe(done - t_submit)
+            _M_REQ_LATENCY.observe(done - t_submit)
 
     # -- async deadline dispatch --------------------------------------------
     def scheduler(self, *, t_max_s: Optional[float] = None):
@@ -443,12 +483,13 @@ class ServeEngine:
         serve garbage.  The full structural signature (treedef + leaf
         shapes/dtypes — the same check ``save_artifact`` applies against
         its manifest template) must match the live ensemble."""
-        got, want = ensemble_signature(ensemble), ensemble_signature(self.ensemble)
-        if got != want:
-            raise ValueError(
-                "ensemble does not match the serving ensemble's structure "
-                f"(treedef + leaf shapes/dtypes): {got} != {want}; "
-                "build a new engine for a different learner/spec/capacity"
-            )
-        self.ensemble = ensemble
-        self._refresh_activity()
+        with trace.span("serve.hot_swap"):
+            got, want = ensemble_signature(ensemble), ensemble_signature(self.ensemble)
+            if got != want:
+                raise ValueError(
+                    "ensemble does not match the serving ensemble's structure "
+                    f"(treedef + leaf shapes/dtypes): {got} != {want}; "
+                    "build a new engine for a different learner/spec/capacity"
+                )
+            self.ensemble = ensemble
+            self._refresh_activity()

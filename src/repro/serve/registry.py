@@ -34,9 +34,23 @@ from typing import Any, Dict, Optional
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics, trace
 from repro.serve import compile_cache
 from repro.serve.artifact import latest_artifact, load_artifact
 from repro.serve.engine import EngineConfig, ServeEngine
+
+# Process-wide registry metric families; ``stats()`` keeps its per-tenant
+# dict shape as a view over the same events.
+_M_SWAPS = obs_metrics.counter(
+    "mafl_registry_swaps_total", "Compile-free hot swaps across all tenants."
+)
+_M_REBUILDS = obs_metrics.counter(
+    "mafl_registry_rebuilds_total",
+    "Engine rebuilds forced by structural checkpoint changes.",
+)
+_M_TENANTS = obs_metrics.gauge(
+    "mafl_registry_tenants", "Tenants currently registered."
+)
 
 
 @dataclasses.dataclass
@@ -91,10 +105,12 @@ class ModelRegistry:
             name=name, publish_dir=publish_dir, engine=engine,
             version=_artifact_version(art.manifest), path=path, config=config,
         )
+        _M_TENANTS.set(len(self._tenants))
         return engine
 
     def remove_tenant(self, name: str) -> None:
         del self._tenants[self._require(name).name]
+        _M_TENANTS.set(len(self._tenants))
 
     def _require(self, name: str) -> Tenant:
         try:
@@ -131,25 +147,32 @@ class ModelRegistry:
         changed: Dict[str, Optional[int]] = {}
         for n in names:
             t = self._tenants[n]
-            path = latest_artifact(t.publish_dir)
-            if path is None or path == t.path:
-                continue
-            art = load_artifact(path)
-            version = _artifact_version(art.manifest)
-            if version is not None and version == t.version:
-                continue
-            try:
-                t.engine.update_ensemble(art.ensemble)
-                t.swaps += 1
-            except ValueError:
-                # structure changed under this tenant: a swap would make
-                # the warm programs serve garbage, so rebuild instead
-                t.engine = ServeEngine.from_artifact(
-                    art, config=self._tenant_config(t.config, art)
-                )
-                t.rebuilds += 1
-            t.version, t.path = version, path
-            changed[n] = version
+            with trace.span("registry.refresh", tenant=n) as sp:
+                path = latest_artifact(t.publish_dir)
+                if path is None or path == t.path:
+                    continue
+                art = load_artifact(path)
+                version = _artifact_version(art.manifest)
+                if version is not None and version == t.version:
+                    continue
+                try:
+                    with trace.span("registry.swap", tenant=n, version=version):
+                        t.engine.update_ensemble(art.ensemble)
+                    t.swaps += 1
+                    _M_SWAPS.inc()
+                    sp.set(outcome="swap")
+                except ValueError:
+                    # structure changed under this tenant: a swap would make
+                    # the warm programs serve garbage, so rebuild instead
+                    with trace.span("registry.rebuild", tenant=n, version=version):
+                        t.engine = ServeEngine.from_artifact(
+                            art, config=self._tenant_config(t.config, art)
+                        )
+                    t.rebuilds += 1
+                    _M_REBUILDS.inc()
+                    sp.set(outcome="rebuild")
+                t.version, t.path = version, path
+                changed[n] = version
         return changed
 
     # -- observability ------------------------------------------------------

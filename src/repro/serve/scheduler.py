@@ -38,6 +38,27 @@ from typing import Deque, Dict, List, NamedTuple, Optional, Union
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics, trace
+from repro.serve.engine import _M_REQ_LATENCY, _M_REQUESTS
+
+# Process-wide scheduler metric families.  ``trigger`` labels why a batch
+# dispatched: "full" (static batch packed), "deadline" (earliest queued
+# deadline arrived), "close" (drain on shutdown).
+_M_DISPATCHES = obs_metrics.counter(
+    "mafl_scheduler_dispatches_total",
+    "Batches dispatched by the deadline scheduler, by trigger.",
+    labels=("trigger",),
+)
+_M_QUEUE_DEPTH = obs_metrics.gauge(
+    "mafl_scheduler_queue_depth",
+    "Requests currently queued (most recently active scheduler).",
+)
+_M_QUEUE_WAIT = obs_metrics.histogram(
+    "mafl_scheduler_queue_wait_seconds",
+    "Per-request seconds from submit to dispatch start — the scheduler-"
+    "wait share of request latency (dispatch+compute is the rest).",
+)
+
 
 class _Pending(NamedTuple):
     rid: int
@@ -90,6 +111,8 @@ class DeadlineScheduler:
                 ids.append(self._next_id)
                 self._next_id += 1
             self.engine.stats.requests += len(ids)
+            _M_REQUESTS.inc(len(ids))
+            _M_QUEUE_DEPTH.set(len(self._queue))
             self._cv.notify_all()
         return ids
 
@@ -146,8 +169,12 @@ class DeadlineScheduler:
         while True:
             with self._cv:
                 while True:
-                    if self._queue and (len(self._queue) >= B or self._closed):
-                        break  # full batch, or closing: run what's there
+                    if self._queue and len(self._queue) >= B:
+                        trigger = "full"  # static batch packed
+                        break
+                    if self._queue and self._closed:
+                        trigger = "close"  # closing: run what's there
+                        break
                     if self._closed:
                         return  # queue empty — done
                     if self._queue:
@@ -157,16 +184,23 @@ class DeadlineScheduler:
                         earliest = min(p.deadline for p in self._queue)
                         wait = earliest - time.perf_counter()
                         if wait <= 0:
-                            break  # deadline reached: dispatch padded
+                            trigger = "deadline"  # dispatch padded
+                            break
                         self._cv.wait(wait)
                     else:
                         self._cv.wait()
                 take = min(B, len(self._queue))
                 batch = [self._queue.popleft() for _ in range(take)]
                 self._inflight = True
+                _M_QUEUE_DEPTH.set(len(self._queue))
+            t_disp = time.perf_counter()
+            for p in batch:
+                _M_QUEUE_WAIT.observe(t_disp - p.t_submit)
+            _M_DISPATCHES.labels(trigger=trigger).inc()
             try:
-                rows = np.stack([p.row for p in batch])
-                preds = self.engine._run_batch(self.engine._pack(rows), len(batch))
+                with trace.span("serve.dispatch", trigger=trigger, n=len(batch)):
+                    rows = np.stack([p.row for p in batch])
+                    preds = self.engine._run_batch(self.engine._pack(rows), len(batch))
                 done = time.perf_counter()
                 answers: List[Union[int, Exception]] = [int(p) for p in preds]
             except Exception as e:  # keep serving; surface at result()
@@ -175,6 +209,7 @@ class DeadlineScheduler:
             with self._cv:
                 for p, a in zip(batch, answers):
                     self._results[p.rid] = a
-                    self.engine.stats.request_latencies.append(done - p.t_submit)
+                    self.engine.stats.request_latencies.observe(done - p.t_submit)
+                    _M_REQ_LATENCY.observe(done - p.t_submit)
                 self._inflight = False
                 self._cv.notify_all()

@@ -255,5 +255,10 @@ def test_interleaved_publish_and_resolve(tmp_path):
             seen.append(int(art.manifest["publish_version"]))
     finally:
         t.join()
+    # one read AFTER the publisher finished: the loop may have observed
+    # stop mid-stream, so only this read is guaranteed to see the final
+    # version
+    seen.append(int(load_artifact(latest_artifact(tmp_path)).manifest["publish_version"]))
+    assert not errors, errors
     assert seen == sorted(seen), "versions went backwards"
     assert seen[-1] == versions[-1]
