@@ -207,8 +207,10 @@ def main(quick: bool = False, tree_hist_only: bool = False) -> None:
     # One all-gather per round (the whole pytree packed into a single f32
     # wire buffer) vs one all-gather per leaf.  The device count must be
     # forced before jax initialises, so this stage runs in a subprocess
-    # on 8 fake CPU devices — the ablation STRUCTURE; the collective win
-    # itself is a multi-host-mesh quantity (see ROADMAP).
+    # on 8 fake CPU devices — the ablation STRUCTURE only; the measured
+    # inter-process win (real gloo collectives, 1→8 OS processes) is the
+    # ±packed_broadcast rows of BENCH_distributed.json, produced by
+    # `python -m benchmarks.bench_scaling --distributed`.
     for row in _packed_broadcast_ablation(rounds=3 if quick else 6):
         rep.add(row.pop("name"), **row)
     # quick runs use fewer rounds/repeats — never let them overwrite the

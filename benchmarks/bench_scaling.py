@@ -1,17 +1,29 @@
 """Paper Fig. 5: strong and weak scaling over 2..64 collaborators on the
 forestcover analogue.
 
-On this 1-core container, collaborator work is vmapped (perfectly
-parallel hardware would overlap it), so we report BOTH:
-  * measured wall time per round of the fused simulation, and
-  * the modelled distributed round time:
+Two sections:
+
+  * default — the single-process fused simulation, where collaborator
+    work is vmapped on this 1-core container, so alongside measured wall
+    time we report the modelled distributed round time
         t_round = max_i t_train_i + t_comm(C) + t_sync
     with t_comm from real serialized hypothesis sizes over the paper's
-    100 Gb/s interconnect — the quantity Fig. 5 actually plots.
+    100 Gb/s interconnect;
+  * ``--distributed`` — the REAL multi-process runtime: 1→8 local
+    processes (one per collaborator, ``fl/distributed.py`` via the
+    ``fl_spawn`` launcher), measured round time and measured collective
+    payload bytes, with the ``±packed_broadcast`` ablation (one packed
+    gather per round vs one gather per pytree leaf) at every size —
+    the in-repo analogue of the paper's 8→64-node figure, committed as
+    ``BENCH_distributed.json``.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import tempfile
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -106,5 +118,73 @@ def main(quick: bool = False) -> None:
     rep.finish()
 
 
+# ---------------------------------------------------------------------------
+# Real multi-process scaling: fl_spawn -> fl_run --distributed
+# ---------------------------------------------------------------------------
+
+
+def _measure_distributed(P: int, rounds: int, *, packed: bool,
+                         dataset: str = "adult", timeout: float = 1200.0) -> dict | None:
+    """One fl_spawn run: P processes, P collaborators; reads process 0's
+    --history-out payload for measured round time + collective bytes."""
+    from repro.launch import fl_spawn
+
+    with tempfile.NamedTemporaryFile(suffix=".json") as f:
+        run_args = [
+            "--dataset", dataset, "--rounds", str(rounds),
+            "--eval-every", "1",  # per-round history rows
+            "--history-out", f.name,
+        ]
+        if not packed:
+            run_args.append("--no-packed-broadcast")
+        rc = fl_spawn.spawn(P, run_args, timeout=timeout)
+        if rc != 0:
+            print(f"# distributed P={P} packed={packed} failed (rc {rc})")
+            return None
+        payload = json.loads(Path(f.name).read_text())
+    hist = payload["history"]
+    # round 0/1 pay jit compilation; steady state is the median of the rest
+    steady = [row["round_seconds"] for row in hist[2:]] or [hist[-1]["round_seconds"]]
+    bd = payload["comm_breakdown"]
+    return {
+        "processes": P,
+        "packed_broadcast": packed,
+        "round_s": round(float(np.median(steady)), 4),
+        "comm_bytes_per_round": int(hist[-1]["comm_bytes"]),  # per-row delta
+        "broadcast_bytes_per_round": int(bd.get("hypotheses", 0) / rounds),
+        "collectives_per_round": payload["collective_calls"] / rounds,
+        "f1": round(hist[-1]["f1"], 4),
+    }
+
+
+def main_distributed(quick: bool = False) -> None:
+    """1→8 local processes, ±packed_broadcast — BENCH_distributed.json."""
+    rep = Reporter("distributed")
+    rounds = 3 if quick else 6
+    sizes = [1, 2, 4] if quick else [1, 2, 4, 8]
+    base = None
+    for P in sizes:
+        for packed in (True, False):
+            r = _measure_distributed(P, rounds, packed=packed)
+            if r is None:
+                continue
+            if packed and base is None:
+                base = r["round_s"]
+            name = f"P{P}_" + ("packed" if packed else "per_leaf")
+            rep.add(name, us_per_call=r["round_s"] * 1e6, **r,
+                    round_s_vs_p1=round(r["round_s"] / base, 3) if base else None)
+    # quick runs use fewer rounds/sizes — never overwrite the committed curve
+    rep.finish(baseline=not quick)
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--distributed", action="store_true",
+                    help="measure the real multi-process runtime "
+                         "(BENCH_distributed.json) instead of the fused model")
+    a = ap.parse_args()
+    if a.distributed:
+        main_distributed(a.quick)
+    else:
+        main(a.quick)

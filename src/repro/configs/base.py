@@ -209,14 +209,13 @@ def _load_all() -> None:
     import importlib
 
     # Seed LLM configs that no test or source module referenced by name
-    # (granite_34b, whisper_large_v3) were pruned; the remaining set is
-    # what tests/test_models_smoke.py, tests/test_system.py and
-    # tests/test_perf_variants.py exercise.
+    # (granite_34b, whisper_large_v3, internvl2_26b) were pruned; the
+    # remaining set is what tests/test_models_smoke.py, tests/test_system.py,
+    # tests/test_perf_variants.py and launch/dryrun.py reference by name.
     for mod in (
         "gemma_2b",
         "xlstm_1_3b",
         "grok_1_314b",
-        "internvl2_26b",
         "stablelm_3b",
         "jamba_v0_1_52b",
         "gemma2_27b",

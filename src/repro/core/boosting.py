@@ -184,15 +184,25 @@ def run_stages(stages, state: BoostState, X, y, mask):
     Every round below is built from (name, fn) stages with the uniform
     signature ``fn(state, carry, X, y, mask) -> (state, carry)`` — the
     final stage leaves the round metrics in ``carry["metrics"]``.  The
-    fused round functions jit THIS composition (the traced jaxpr is
-    identical to the old inline bodies, so the fused hot path is
-    unchanged), while the observability layer jits each stage separately
-    to time fit / score / aggregate as real host-visible phases
-    (``fl/federation.py`` under ``--trace``).
+    fused round functions jit THIS composition, while the observability
+    layer jits each stage separately to time fit / score / aggregate as
+    real host-visible phases (``fl/federation.py`` under ``--trace``).
+
+    An ``optimization_barrier`` seals each stage boundary so XLA cannot
+    fuse reductions ACROSS stages (e.g. folding the score stage's error
+    matrix straight into the aggregate stage's eps sum, which reassociates
+    the reduction).  This pins one canonical numeric result for a round:
+    the one fused jit, the per-stage traced jits, and the per-collaborator
+    distributed runtime (``fl/distributed.py`` — where the stage boundary
+    is a real network collective and fusing across it is impossible) are
+    all bit-for-bit identical, which is what the multi-process equivalence
+    tests assert.  The barrier only limits inter-stage fusion; each
+    stage's internals compile exactly as before.
     """
     carry: Dict[str, Any] = {}
     for _, fn in stages:
         state, carry = fn(state, carry, X, y, mask)
+        state, carry = jax.lax.optimization_barrier((state, carry))
     return state, carry["metrics"]
 
 

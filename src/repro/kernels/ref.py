@@ -49,9 +49,15 @@ def weighted_errors_ref(
     y: jax.Array,  # [n] i32
     w: jax.Array,  # [n] f32 (mask folded in)
 ) -> jax.Array:
-    """eps[h] = sum_n w_n * 1[preds[h, n] != y_n]  (AdaBoost.F step 3)."""
+    """eps[h] = sum_n w_n * 1[preds[h, n] != y_n]  (AdaBoost.F step 3).
+
+    Reduced with a last-axis ``sum`` (not a matvec): reduce lowering is
+    row-independent, so the per-shard call a distributed collaborator
+    makes (``fl/distributed.py``) is bit-identical to the same row of the
+    fused round's vmapped ``error_matrix`` — a dot_general's tiling is
+    batch-size dependent and broke that equality in the last ulp."""
     mis = (preds != y[None, :]).astype(w.dtype)
-    return mis @ w
+    return jnp.sum(mis * w[None, :], axis=-1)
 
 
 def vote_argmax_ref(

@@ -8,12 +8,15 @@
       --collaborators 8 --learners decision_tree,ridge,gaussian_nb
 
 Modes:
-  default    — fused jit round (all §5.1 optimisations on)
-  --faithful — interpreted OpenFL-style round (serialization + TensorDB +
-               polling barriers), the pre-optimisation behaviour
-  --sharded  — SPMD shard_map round over the host mesh (requires >1 device)
-  --learners — comma-separated registry keys cycled across collaborators
-               (heterogeneous federation; fused mode only)
+  default       — fused jit round (all §5.1 optimisations on)
+  --faithful    — interpreted OpenFL-style round (serialization + TensorDB +
+                  polling barriers), the pre-optimisation behaviour
+  --sharded     — SPMD shard_map round over the host mesh (requires >1 device)
+  --learners    — comma-separated registry keys cycled across collaborators
+                  (heterogeneous federation; fused mode only)
+  --distributed — process-per-collaborator runtime over jax.distributed
+                  collectives (one fl_run per process; see
+                  ``launch/fl_spawn.py`` for the local N-process launcher)
 """
 from __future__ import annotations
 
@@ -72,7 +75,42 @@ def main(argv=None):
                     help="dump the process metrics registry (counters/gauges/"
                          "histograms) in Prometheus text exposition format")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--distributed", action="store_true",
+                    help="process-per-collaborator runtime: this process is "
+                         "collaborator --process-id of a --num-processes "
+                         "federation exchanging rounds over real collectives")
+    ap.add_argument("--coordinator", default="127.0.0.1:9781", metavar="HOST:PORT",
+                    help="jax.distributed coordinator address (process 0 hosts it)")
+    ap.add_argument("--num-processes", type=int, default=1)
+    ap.add_argument("--process-id", type=int, default=0)
+    ap.add_argument("--no-packed-broadcast", action="store_true",
+                    help="gather the hypothesis pytree leaf-by-leaf instead of "
+                         "as one packed wire buffer (the ±packed_broadcast "
+                         "ablation of BENCH_distributed.json)")
+    ap.add_argument("--publish-every", type=int, default=None, metavar="K",
+                    help="publish a versioned serving artifact every K rounds "
+                         "(process 0 in distributed mode)")
+    ap.add_argument("--publish-dir", default=None,
+                    help="directory for the rolling artifact stream")
+    ap.add_argument("--history-out", default=None, metavar="PATH",
+                    help="write the run history + comm accounting as JSON "
+                         "(process 0 in distributed mode)")
     args = ap.parse_args(argv)
+    if args.distributed:
+        # must precede every other JAX call in the process: picks the gloo
+        # CPU collective backend and joins the coordinator's process group
+        if args.faithful or args.sharded or args.learners:
+            ap.error("--distributed replaces --faithful/--sharded and is "
+                     "homogeneous-only (no --learners)")
+        if args.algorithm == "fedavg":
+            ap.error("--distributed covers the MAFL boosting algorithms, not fedavg")
+        if args.collaborators != args.num_processes:
+            ap.error(f"--distributed is process-per-collaborator: "
+                     f"--collaborators {args.collaborators} != "
+                     f"--num-processes {args.num_processes}")
+        from repro.fl import distributed as _dist
+
+        _dist.initialize(args.coordinator, args.num_processes, args.process_id)
     if args.trace:
         trace.enable()
 
@@ -105,6 +143,9 @@ def main(argv=None):
             default_hparams(args.learner, args.depth),
         )
 
+    if args.distributed:
+        return _run_distributed(args, lspec, Xs, ys, masks, Xte, yte, k3)
+
     if args.sharded:
         return _run_sharded(args, lspec, Xs, ys, masks, Xte, yte, k3)
 
@@ -132,8 +173,22 @@ def main(argv=None):
         )
     fed = Federation(plan, Xs, ys, masks, Xte, yte, lspec, k3)
     t0 = time.time()
-    history = fed.run(eval_every=args.eval_every)
+    history = fed.run(eval_every=args.eval_every,
+                      publish_every=args.publish_every,
+                      publish_dir=args.publish_dir)
     dt = time.time() - t0
+    _print_history(history)
+    print(f"total {dt:.1f}s  comm {fed.comm_bytes/1e6:.2f} MB  final F1 {history[-1]['f1']:.4f}")
+    if args.history_out:
+        import json
+
+        with open(args.history_out, "w") as f:
+            json.dump({"history": history, "comm_bytes": fed.comm_bytes}, f, indent=2)
+    _finish_obs(args)
+    return history
+
+
+def _print_history(history):
     for h in history:
         extra = ""
         if "round_seconds" in h:
@@ -141,8 +196,43 @@ def main(argv=None):
                      f"  {h.get('comm_bytes', 0) / 1e3:9.1f} kB")
         print(f"round {h['round']:4d}  f1 {h['f1']:.4f}  "
               f"alpha {h.get('alpha', 0):.3f}{extra}")
-    print(f"total {dt:.1f}s  comm {fed.comm_bytes/1e6:.2f} MB  final F1 {history[-1]['f1']:.4f}")
-    _finish_obs(args)
+
+
+def _run_distributed(args, lspec, Xs, ys, masks, Xte, yte, key):
+    """One process of the process-per-collaborator federation (the local
+    N-process launch lives in ``launch/fl_spawn.py``)."""
+    import dataclasses
+    import json
+
+    from repro.fl.distributed import DistributedFederation, is_main
+
+    plan = (bagging_plan(rounds=args.rounds) if args.algorithm == "bagging"
+            else adaboost_plan(rounds=args.rounds, algorithm=args.algorithm))
+    if args.use_pallas:
+        plan = dataclasses.replace(
+            plan,
+            optimizations=dataclasses.replace(plan.optimizations, use_pallas=True),
+        )
+    fed = DistributedFederation(
+        plan, Xs, ys, masks, Xte, yte, lspec, key,
+        packed_broadcast=not args.no_packed_broadcast,
+    )
+    t0 = time.time()
+    history = fed.run(
+        eval_every=args.eval_every,
+        publish_every=args.publish_every, publish_dir=args.publish_dir,
+    )
+    dt = time.time() - t0
+    if is_main():
+        _print_history(history)
+        print(f"distributed ({fed.C} processes, "
+              f"{'packed' if fed.packed_broadcast else 'per-leaf'} broadcast): "
+              f"total {dt:.1f}s  comm {fed.comm_bytes/1e6:.2f} MB  "
+              f"final F1 {history[-1]['f1']:.4f}")
+        if args.history_out:
+            with open(args.history_out, "w") as f:
+                json.dump(fed.summary(), f, indent=2)
+        _finish_obs(args)
     return history
 
 

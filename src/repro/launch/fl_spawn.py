@@ -1,0 +1,139 @@
+"""Local launcher for the process-per-collaborator runtime — spawns N
+``fl_run --distributed`` processes with the coordinator wiring, for CI
+and laptops (real cluster launches run one ``fl_run --distributed`` per
+node with the same flags pointed at a shared coordinator address).
+
+  # 4 collaborators = 4 OS processes, one gather-per-round exchange:
+  PYTHONPATH=src python -m repro.launch.fl_spawn --num-processes 4 -- \
+      --dataset adult --rounds 20 --eval-every 5
+
+Everything after ``--`` is passed through to ``fl_run`` on every
+process; the launcher injects ``--distributed``, the coordinator
+address (a free localhost port), per-process ids, and forces
+``--collaborators N`` (process-per-collaborator).  Process 0 — the
+coordinator: eval, history, checkpoints — streams to this terminal;
+the other processes log to temp files whose tails are printed on
+failure.  ``--min-f1 X`` turns the launcher into a convergence
+assertion (non-zero exit unless process 0 reports ``final F1 >= X``).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import socket
+import subprocess
+import sys
+import tempfile
+from typing import List, Optional
+
+
+def free_port() -> int:
+    with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def spawn(
+    num_processes: int,
+    run_args: List[str],
+    *,
+    timeout: float = 1800.0,
+    min_f1: Optional[float] = None,
+    python: str = sys.executable,
+) -> int:
+    """Launch the process group and wait; returns the exit code (0 = every
+    process succeeded and the --min-f1 assertion, if any, held)."""
+    coord = f"127.0.0.1:{free_port()}"
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)  # fake-device counts break 1-device-per-process
+    env.setdefault("JAX_PLATFORMS", "cpu")
+
+    procs, logs = [], []
+    for i in range(num_processes):
+        cmd = [
+            python, "-m", "repro.launch.fl_run", "--distributed",
+            "--coordinator", coord,
+            "--num-processes", str(num_processes), "--process-id", str(i),
+            *run_args,
+            "--collaborators", str(num_processes),  # last flag wins in argparse
+        ]
+        if i == 0:
+            procs.append(subprocess.Popen(
+                cmd, env=env, stdout=subprocess.PIPE,
+                stderr=subprocess.STDOUT, text=True,
+            ))
+            logs.append(None)
+        else:
+            logf = tempfile.NamedTemporaryFile(
+                "w+", prefix=f"fl_spawn_p{i}_", suffix=".log", delete=False
+            )
+            procs.append(subprocess.Popen(
+                cmd, env=env, stdout=logf, stderr=subprocess.STDOUT, text=True,
+            ))
+            logs.append(logf)
+
+    # stream the coordinator's output live while collecting it
+    out_lines: List[str] = []
+    try:
+        for line in procs[0].stdout:  # type: ignore[union-attr]
+            sys.stdout.write(line)
+            sys.stdout.flush()
+            out_lines.append(line)
+        rcs = [p.wait(timeout=timeout) for p in procs]
+    except (subprocess.TimeoutExpired, KeyboardInterrupt):
+        for p in procs:
+            p.kill()
+        print("fl_spawn: timed out / interrupted; killed the process group",
+              file=sys.stderr)
+        return 124
+    finally:
+        for f in logs:
+            if f is not None:
+                f.close()
+
+    rc = max(rcs)
+    if rc != 0:
+        for i, (r, f) in enumerate(zip(rcs, logs)):
+            if r != 0 and f is not None:
+                tail = open(f.name).read()[-2000:]
+                print(f"--- process {i} exited {r}; log tail ---\n{tail}",
+                      file=sys.stderr)
+    for f in logs:
+        if f is not None:
+            os.unlink(f.name)
+
+    if rc == 0 and min_f1 is not None:
+        m = re.search(r"final F1 (\d+\.\d+)", "".join(out_lines))
+        if m is None:
+            print("fl_spawn: --min-f1 set but process 0 printed no 'final F1'",
+                  file=sys.stderr)
+            return 3
+        if float(m.group(1)) < min_f1:
+            print(f"fl_spawn: final F1 {m.group(1)} < required {min_f1}",
+                  file=sys.stderr)
+            return 4
+    return rc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="spawn N local fl_run --distributed processes "
+                    "(args after -- go to fl_run)")
+    ap.add_argument("--num-processes", "-n", type=int, default=4)
+    ap.add_argument("--timeout", type=float, default=1800.0,
+                    help="seconds before the whole process group is killed")
+    ap.add_argument("--min-f1", type=float, default=None,
+                    help="fail unless process 0's 'final F1' meets this floor")
+    ap.add_argument("run_args", nargs=argparse.REMAINDER,
+                    help="-- then fl_run flags (e.g. -- --dataset adult --rounds 20)")
+    args = ap.parse_args(argv)
+    run_args = args.run_args
+    if run_args and run_args[0] == "--":
+        run_args = run_args[1:]
+    return spawn(args.num_processes, run_args,
+                 timeout=args.timeout, min_f1=args.min_f1)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,6 +13,7 @@ DOCS = [REPO / "docs" / "ARCHITECTURE.md", REPO / "README.md"]
 # every CLI surface the architecture doc may quote flags from
 CLI_SOURCES = [
     REPO / "src" / "repro" / "launch" / "fl_run.py",
+    REPO / "src" / "repro" / "launch" / "fl_spawn.py",
     REPO / "src" / "repro" / "launch" / "serve_fl.py",
     REPO / "benchmarks" / "run.py",
     REPO / "benchmarks" / "bench_heterogeneous.py",
