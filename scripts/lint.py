@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""mafl-lint CLI — the repo's contract gate (CI runs it before tests).
+
+  PYTHONPATH=src python scripts/lint.py --strict src/
+
+Checks the AST of every Python file under the given paths against the
+repo-specific rules (PRNG discipline, batch-invariant reductions,
+stage-boundary seals, host-sync/recompile hazards, lock discipline,
+the obs taxonomy — ``--list-rules`` prints them all).  Suppress a real
+exception with a ``# mafl: allow[rule-id]`` pragma on the offending
+line, or record tracked debt with ``--write-baseline``; ``--strict``
+exits non-zero on any finding that is neither.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis import (  # noqa: E402
+    all_rules,
+    load_baseline,
+    run_lint_project,
+    write_baseline,
+)
+from repro.analysis.framework import Project  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="lint.py", description="mafl-lint: repo-contract static analysis"
+    )
+    ap.add_argument(
+        "paths", nargs="*", default=None,
+        help="directories to scan (default: the repo's src/)",
+    )
+    ap.add_argument(
+        "--strict", action="store_true",
+        help="exit 1 on any non-baselined, non-pragma finding",
+    )
+    ap.add_argument(
+        "--rules", default=None,
+        help="comma-separated rule ids to run (default: all)",
+    )
+    ap.add_argument(
+        "--baseline", default=None,
+        help="baseline JSON (default: <repo>/lint_baseline.json if present)",
+    )
+    ap.add_argument(
+        "--no-baseline", action="store_true",
+        help="ignore any baseline file (report ALL findings)",
+    )
+    ap.add_argument(
+        "--write-baseline", action="store_true",
+        help="write the current findings to the baseline file and exit 0",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true",
+        help="print every registered rule id + rationale and exit",
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in all_rules():
+            print(f"{r.id:<16} {r.doc}")
+        return 0
+
+    paths = [Path(p) for p in (args.paths or [REPO / "src"])]
+    rules = args.rules.split(",") if args.rules else None
+
+    baseline_path = Path(args.baseline) if args.baseline else REPO / "lint_baseline.json"
+    entries = []
+    if not args.no_baseline and not args.write_baseline and baseline_path.is_file():
+        entries = load_baseline(baseline_path)
+
+    total_findings = 0
+    stale_total = 0
+    all_raw = []
+    projects = []
+    for path in paths:
+        if not path.is_dir():
+            print(f"mafl-lint: not a directory: {path}", file=sys.stderr)
+            return 2
+        project = Project.load(path)
+        result = run_lint_project(project, rules=rules, baseline_entries=entries)
+        projects.append((project, result))
+        for f in result.findings:
+            print(f.format())
+        all_raw.extend(result.findings + result.baselined)
+        total_findings += len(result.findings)
+        stale_total += len(result.stale_baseline)
+        for e in result.stale_baseline:
+            print(
+                f"stale baseline entry (debt paid — remove it): "
+                f"[{e['rule']}] {e['path']}: {e['context']!r}",
+                file=sys.stderr,
+            )
+
+    if args.write_baseline:
+        # one baseline per scan invocation: merge findings over all paths
+        project = projects[0][0]
+        write_baseline(baseline_path, all_raw, project)
+        print(f"wrote {len(all_raw)} finding(s) to {baseline_path}")
+        return 0
+
+    suppressed = sum(
+        len(r.pragma_suppressed) + len(r.baselined) for _, r in projects
+    )
+    print(
+        f"mafl-lint: {total_findings} finding(s), {suppressed} suppressed "
+        f"(pragma/baseline), {stale_total} stale baseline entr(y/ies)",
+        file=sys.stderr,
+    )
+    if total_findings and args.strict:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

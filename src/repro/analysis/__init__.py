@@ -1,0 +1,21 @@
+"""mafl-lint: repo-specific static analysis for the MAFL contracts.
+
+See :mod:`repro.analysis.framework` for the rule-author API and
+``scripts/lint.py`` for the CLI.  Pure stdlib ``ast`` — importing this
+package never imports JAX or the analyzed code.
+"""
+from repro.analysis.framework import (  # noqa: F401
+    Finding,
+    LintResult,
+    Module,
+    Project,
+    Rule,
+    all_rules,
+    apply_baseline,
+    get_rule,
+    load_baseline,
+    rule,
+    run_lint,
+    run_lint_project,
+    write_baseline,
+)

@@ -1,0 +1,258 @@
+"""AST helpers shared by the mafl-lint rules: qualified-name resolution
+through import aliases, a per-function table, an intra-repo call graph
+with reachability — pure stdlib ``ast``, no imports of the analyzed
+code (so lint runs without JAX installed).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.framework import Module, Project
+
+# -- import aliases ---------------------------------------------------------
+
+
+def import_aliases(tree: ast.Module) -> Dict[str, str]:
+    """Name bound in this module -> the dotted thing it refers to.
+
+    ``import jax.numpy as jnp``            -> {"jnp": "jax.numpy"}
+    ``from repro.core import scoring``     -> {"scoring": "repro.core.scoring"}
+    ``from jax import lax``                -> {"lax": "jax.lax"}
+    ``from repro.kernels.ops import weighted_errors as we``
+                                           -> {"we": "repro.kernels.ops.weighted_errors"}
+    Relative imports are resolved as if absolute from the scan root's
+    package layout is unknown — they keep their tail ("...ops.f" -> "ops.f"),
+    which still suffix-matches inside one package.
+    """
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0]
+                )
+                if a.asname:
+                    out[a.asname] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` attribute chain -> "a.b.c" (None for anything else)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def resolve_dotted(node: ast.AST, aliases: Dict[str, str]) -> Optional[str]:
+    """Fully-qualify a Name/Attribute through the module's imports:
+    with ``import jax.numpy as jnp``, ``jnp.dot`` -> "jax.numpy.dot"."""
+    d = dotted_name(node)
+    if d is None:
+        return None
+    head, _, tail = d.partition(".")
+    base = aliases.get(head)
+    if base is None:
+        return d
+    return f"{base}.{tail}" if tail else base
+
+
+def call_target(call: ast.Call, aliases: Dict[str, str]) -> Optional[str]:
+    return resolve_dotted(call.func, aliases)
+
+
+# -- function table / call graph -------------------------------------------
+
+
+class FuncInfo:
+    """One top-level function or method; nested defs/lambdas/comprehensions
+    are analyzed as part of their enclosing unit (call-graph granularity)."""
+
+    def __init__(self, module: Module, name: str, node: ast.AST):
+        self.module = module
+        self.name = name  # "func" or "Class.method"
+        self.node = node
+
+    @property
+    def key(self) -> Tuple[str, str]:
+        return (self.module.rel, self.name)
+
+
+def module_functions(mod: Module) -> List[FuncInfo]:
+    out: List[FuncInfo] = []
+    for node in mod.tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.append(FuncInfo(mod, node.name, node))
+        elif isinstance(node, ast.ClassDef):
+            for item in node.body:
+                if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    out.append(FuncInfo(mod, f"{node.name}.{item.name}", item))
+    return out
+
+
+def _module_rel(dotted: str) -> str:
+    """Dotted module path -> scan-root-relative file path."""
+    return dotted.replace(".", "/") + ".py"
+
+
+class CallGraph:
+    """Intra-project call graph over (module rel, function name) keys.
+
+    Resolution is conservative: plain names to same-module functions or
+    ``from``-imports, one-level attributes through module aliases, and
+    ``self.method`` within a class.  Unresolvable callees (data-driven
+    dispatch, foreign objects) simply add no edge — reachability-based
+    rules err toward missing exotic paths, never toward false edges.
+    """
+
+    def __init__(self, project: Project):
+        self.project = project
+        self.funcs: Dict[Tuple[str, str], FuncInfo] = {}
+        by_module: Dict[str, List[FuncInfo]] = {}
+        for mod in project.modules:
+            fns = module_functions(mod)
+            by_module[mod.rel] = fns
+            for f in fns:
+                self.funcs[f.key] = f
+        self.edges: Dict[Tuple[str, str], Set[Tuple[str, str]]] = {}
+        for mod in project.modules:
+            aliases = import_aliases(mod.tree)
+            local = {f.name for f in by_module[mod.rel]}
+            for f in by_module[mod.rel]:
+                self.edges[f.key] = self._callees(f, aliases, local)
+
+    def _callees(
+        self, f: FuncInfo, aliases: Dict[str, str], local: Set[str]
+    ) -> Set[Tuple[str, str]]:
+        out: Set[Tuple[str, str]] = set()
+        cls = f.name.split(".")[0] if "." in f.name else None
+        for node in ast.walk(f.node):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            if isinstance(fn, ast.Name):
+                if fn.id in local:
+                    out.add((f.module.rel, fn.id))
+                elif fn.id in aliases:
+                    tgt = self._resolve_imported(aliases[fn.id])
+                    if tgt:
+                        out.add(tgt)
+            elif isinstance(fn, ast.Attribute):
+                if isinstance(fn.value, ast.Name) and fn.value.id == "self" and cls:
+                    meth = (f.module.rel, f"{cls}.{fn.attr}")
+                    if meth in self.funcs:
+                        out.add(meth)
+                    continue
+                d = resolve_dotted(fn, aliases)
+                if d and "." in d:
+                    mod_path, _, attr = d.rpartition(".")
+                    tgt = self._find_module_func(mod_path, attr)
+                    if tgt:
+                        out.add(tgt)
+        return out
+
+    def _resolve_imported(self, dotted: str) -> Optional[Tuple[str, str]]:
+        mod_path, _, attr = dotted.rpartition(".")
+        if not mod_path:
+            return None
+        return self._find_module_func(mod_path, attr)
+
+    def _find_module_func(self, mod_dotted: str, attr: str) -> Optional[Tuple[str, str]]:
+        rel = _module_rel(mod_dotted)
+        mod = self.project.module(rel)
+        if mod is None:
+            # tolerate roots above/below the scan root ("repro.x" vs "x")
+            cands = self.project.modules_matching(rel)
+            mod = cands[0] if len(cands) == 1 else None
+        if mod is None:
+            return None
+        for key in ((mod.rel, attr),):
+            if key in self.funcs:
+                return key
+        # a plain function name may live behind a class — try methods too
+        for (r, name), _ in self.funcs.items():
+            if r == mod.rel and name.endswith(f".{attr}"):
+                return (r, name)
+        return None
+
+    def reachable(self, roots: Iterator[Tuple[str, str]]) -> Set[Tuple[str, str]]:
+        seen: Set[Tuple[str, str]] = set()
+        stack = [r for r in roots if r in self.funcs]
+        while stack:
+            cur = stack.pop()
+            if cur in seen:
+                continue
+            seen.add(cur)
+            stack.extend(self.edges.get(cur, ()))
+        return seen
+
+
+# -- small predicates -------------------------------------------------------
+
+
+def enclosing_function(mod: Module, node: ast.AST) -> Optional[ast.AST]:
+    """Nearest enclosing def/lambda (None at module scope)."""
+    for anc in mod.ancestors(node):
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            return anc
+    return None
+
+
+def inside_loop(mod: Module, node: ast.AST) -> Optional[ast.AST]:
+    """Nearest enclosing for/while STATEMENT (comprehensions don't count:
+    they are almost always over already-materialised host sequences)."""
+    for anc in mod.ancestors(node):
+        if isinstance(anc, (ast.For, ast.While)):
+            return anc
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            return None
+    return None
+
+
+def branch_path(mod: Module, node: ast.AST) -> List[Tuple[ast.If, str]]:
+    """The (If-node, arm) chain above ``node`` — two nodes conflict as
+    "both execute" only if they agree on every shared If's arm."""
+    out: List[Tuple[ast.If, str]] = []
+    cur = node
+    for anc in mod.ancestors(node):
+        if isinstance(anc, ast.If):
+            arm = "body" if any(cur is n or _contains(n, cur) for n in anc.body) else "orelse"
+            out.append((anc, arm))
+        cur = anc
+    return out
+
+
+def _contains(tree: ast.AST, target: ast.AST) -> bool:
+    return any(n is target for n in ast.walk(tree))
+
+
+def branches_compatible(
+    a: List[Tuple[ast.If, str]], b: List[Tuple[ast.If, str]]
+) -> bool:
+    """False when the two sites sit in opposite arms of the same If —
+    they can never both run."""
+    arms_a = {id(if_node): arm for if_node, arm in a}
+    for if_node, arm in b:
+        other = arms_a.get(id(if_node))
+        if other is not None and other != arm:
+            return False
+    return True
+
+
+def assigned_names(target: ast.AST) -> Set[str]:
+    """Flat names bound by an assignment/for target (tuples unpacked)."""
+    out: Set[str] = set()
+    for n in ast.walk(target):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+    return out

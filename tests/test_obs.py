@@ -187,6 +187,40 @@ def test_histogram_memory_is_bounded():
     assert n_buckets < 250
 
 
+def test_histogram_reads_never_tear_under_concurrent_writes():
+    """Regression: the read properties (count/sum/min/max/mean, len) take
+    the lock.  Every sample is exactly 1.0, so an unlocked reader pairing
+    a fresh _sum with a stale _count would compute mean != 1.0."""
+    h = Histogram()
+    h.observe(1.0)  # non-empty before readers start
+    n_per_writer, n_writers = 2000, 4
+    stop = threading.Event()
+    torn = []
+
+    def write():
+        for _ in range(n_per_writer):
+            h.observe(1.0)
+
+    def read():
+        while not stop.is_set():
+            if h.count and h.mean != 1.0:
+                torn.append((h.count, h.sum))
+            if not (h.min == h.max == 1.0):
+                torn.append(("minmax", h.min, h.max))
+
+    readers = [threading.Thread(target=read) for _ in range(2)]
+    writers = [threading.Thread(target=write) for _ in range(n_writers)]
+    for t in readers + writers:
+        t.start()
+    for t in writers:
+        t.join()
+    stop.set()
+    for t in readers:
+        t.join()
+    assert not torn, torn[:3]
+    assert h.count == 1 + n_per_writer * n_writers  # no lost updates either
+
+
 # -- metrics registry --------------------------------------------------------
 
 def test_registry_reregistration_returns_same_metric():

@@ -1,5 +1,7 @@
 """Correctness of the §Perf optimisation paths (EXPERIMENTS.md): every
 variant must be semantically identical to the baseline it replaces."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,7 +14,8 @@ from repro.models import moe as moe_mod
 
 
 def test_chunked_local_attention_matches_masked_full():
-    cfg = get_arch("gemma2-27b").reduced()  # softcap 50 exercised
+    # softcap 50 exercised (retargeted after the gemma2-27b config prune)
+    cfg = dataclasses.replace(get_arch("gemma-2b").reduced(), logit_softcap=50.0)
     key = jax.random.PRNGKey(0)
     B, S, H, Kv, D, w = 2, 256, 4, 2, 32, 64
     ks = jax.random.split(key, 3)
@@ -28,7 +31,7 @@ def test_chunked_local_attention_matches_masked_full():
 
 
 def test_moe_grouped_dispatch_matches_global():
-    cfg = get_arch("jamba-v0.1-52b").reduced()
+    cfg = get_arch("grok-1-314b").reduced()  # MoE survivor of the config prune
     key = jax.random.PRNGKey(1)
     p, _ = moe_mod.init_moe(cfg, key)
     x = jax.random.normal(jax.random.PRNGKey(2), (4, 16, cfg.d_model))
@@ -44,7 +47,7 @@ def test_moe_grouped_dispatch_matches_global():
 
 
 def test_grad_accumulation_matches_single_step():
-    cfg = get_arch("stablelm-3b").reduced()
+    cfg = get_arch("gemma-2b").reduced()
     key = jax.random.PRNGKey(3)
     state = M.init_train_state(cfg, key)
     batch = {"tokens": jax.random.randint(key, (4, 33), 0, cfg.vocab_size)}

@@ -249,6 +249,35 @@ def test_update_ensemble_rejects_foreign_structure():
     assert engine.stats.compiles + engine.stats.cache_hits == programs
 
 
+def test_update_ensemble_publishes_atomically():
+    """Regression: a hot swap is ONE attribute store of the
+    (ensemble, active-mask) pair, so a dispatching thread can never see
+    a new ensemble with a stale mask (or vice versa)."""
+    learner, spec, ens, X = _small_ensemble("decision_tree", jax.random.PRNGKey(18))
+    engine = ServeEngine(learner, spec, ens, batch_size=64)
+    engine.predict(np.asarray(X))
+
+    stores = []
+    cls = type(engine)
+
+    class Spy(cls):
+        def __setattr__(self, name, value):
+            if name == "_live":
+                stores.append(value)
+            super().__setattr__(name, value)
+
+    engine.__class__ = Spy
+    swapped = ens._replace(alpha=ens.alpha * 2.0)
+    engine.update_ensemble(swapped)
+    engine.__class__ = cls
+    # exactly one publication, carrying ensemble and mask together
+    assert len(stores) == 1 and len(stores[0]) == 2
+    assert stores[0][0] is swapped
+    # readers resolve both views out of the published pair
+    assert engine.ensemble is swapped
+    assert engine._active == engine._compute_active(swapped)
+
+
 # ---------------------------------------------------------------------------
 # Shard-resident vote cache — correctness while the ensemble grows
 # ---------------------------------------------------------------------------

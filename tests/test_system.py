@@ -1,5 +1,7 @@
 """System-level tests: dry-run machinery (sharding resolution, roofline
 parser, input specs) on the host, without the 512-device setting."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -90,7 +92,10 @@ def test_param_counts_moe_active():
 
 
 def test_input_specs_decode_state_shapes():
-    cfg = get_arch("gemma2-27b")
+    # local/global interleave retargeted to gemma-2b after the config prune
+    cfg = dataclasses.replace(
+        get_arch("gemma-2b"), layer_pattern="local_global", window=4096
+    )
     shape = INPUT_SHAPES["long_500k"]
     specs = M.input_specs(cfg, shape)
     leaves = jax.tree.leaves(specs["state"])
@@ -100,7 +105,7 @@ def test_input_specs_decode_state_shapes():
 
 
 def test_model_flops_kinds():
-    cfg = get_arch("stablelm-3b")
+    cfg = get_arch("gemma-2b")
     shapes, axes = shapes_and_axes(cfg)
     tr = roofline.model_flops(cfg, shapes, axes, INPUT_SHAPES["train_4k"])
     pf = roofline.model_flops(cfg, shapes, axes, INPUT_SHAPES["prefill_32k"])
