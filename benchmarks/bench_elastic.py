@@ -1,0 +1,126 @@
+"""Elastic-federation cost curves (committed as ``BENCH_elastic.json``).
+
+Two sections over adult with C=8 collaborators:
+
+  * accuracy-vs-dropout — the VIRTUAL elastic runtime with seeded
+    per-round drop probabilities 0 → 0.5, plus the lockstep
+    ``Federation.run`` as the zero-dropout baseline row (the elastic
+    runtime with no faults and no deadline is bit-for-bit that
+    baseline — asserted in tests/test_elastic.py — so any accuracy gap
+    in this curve is the PRICE OF DROPOUT, never runtime skew);
+  * round-time-vs-stragglers — the REALTIME runtime where a growing
+    fraction of collaborators is delayed past the deadline: measured
+    mean round wall time with the deadline closing rounds early vs the
+    deadline=None baseline that waits out every straggler, plus the
+    late-merge counts the deadline path banks.
+
+Usage::
+
+  PYTHONPATH=src python -m benchmarks.bench_elastic            # full
+  PYTHONPATH=src python -m benchmarks.bench_elastic --quick    # CI
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Reporter
+from repro.core.plan import adaboost_plan
+from repro.data import get_dataset
+from repro.fl.elastic import FaultPlan, ParticipationPolicy
+from repro.fl.federation import Federation
+from repro.fl.partition import iid_partition
+from repro.learners import LearnerSpec
+
+
+def _build(dataset: str, C: int, rounds: int):
+    dspec, (Xtr, ytr, Xte, yte) = get_dataset(dataset, jax.random.PRNGKey(0))
+    Xs, ys, masks = iid_partition(Xtr, ytr, C, jax.random.PRNGKey(1))
+    lspec = LearnerSpec("decision_tree", dspec.n_features, dspec.n_classes,
+                        {"depth": 3, "n_bins": 16})
+
+    def fed():
+        return Federation(adaboost_plan(rounds=rounds), Xs, ys, masks,
+                          Xte, yte, lspec, jax.random.PRNGKey(2))
+
+    return fed
+
+
+def accuracy_vs_dropout(rep: Reporter, fed_factory, C: int, rounds: int) -> None:
+    """Final F1 as the per-round drop probability grows; row 0 is the
+    lockstep baseline (zero dropout by construction)."""
+    lock = fed_factory()
+    hist = lock.run(eval_every=rounds)
+    rep.add("dropout/lockstep-baseline", drop_p=0.0, final_f1=hist[-1]["f1"],
+            rounds=rounds, collaborators=C, mean_responders=float(C))
+
+    for drop_p in (0.0, 0.1, 0.25, 0.5):
+        fed = fed_factory()
+        hist = fed.run(
+            eval_every=rounds,
+            policy=ParticipationPolicy(deadline_s=1.0),
+            faults=FaultPlan(seed=11, drop_p=drop_p),
+        )
+        e = fed.elastic
+        rep.add(
+            f"dropout/p{drop_p}", drop_p=drop_p, final_f1=hist[-1]["f1"],
+            rounds=rounds, collaborators=C,
+            mean_responders=float(np.mean(e.responders_log)),
+            dropouts=sum(e.dropouts.values()),
+        )
+
+
+def round_time_vs_stragglers(rep: Reporter, fed_factory, C: int,
+                             rounds: int) -> None:
+    """Mean wall time per round as the straggler fraction grows, with
+    and without the deadline: the deadline path closes over responders
+    (and banks the stragglers' fits as discounted late merges); the
+    baseline waits out every delay."""
+    delay = (0.5, 0.7)
+    deadline = 0.25
+    for frac in (0.0, 0.25, 0.5):
+        faults = FaultPlan(seed=23, delay_p=frac, delay_range_s=delay)
+        for name, pol in (
+            ("deadline", ParticipationPolicy(deadline_s=deadline,
+                                             realtime=True)),
+            ("wait-all", ParticipationPolicy(deadline_s=None, realtime=True)),
+        ):
+            fed = fed_factory()
+            t0 = time.perf_counter()
+            fed.run(eval_every=rounds, policy=pol, faults=faults)
+            dt = time.perf_counter() - t0
+            e = fed.elastic
+            rep.add(
+                f"straggler/f{frac}-{name}", straggler_frac=frac,
+                policy=name, deadline_s=pol.deadline_s,
+                round_seconds=dt / rounds,
+                mean_responders=float(np.mean(e.responders_log)),
+                late_merges=len(e.late_log),
+            )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="elastic federation curves")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized: fewer rounds, fewer collaborators")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--collaborators", "-C", type=int, default=None)
+    ap.add_argument("--dataset", default=None)
+    args = ap.parse_args()
+
+    C = args.collaborators or (4 if args.quick else 8)
+    rounds = args.rounds or (4 if args.quick else 10)
+    dataset = args.dataset or ("vehicle" if args.quick else "adult")
+
+    rep = Reporter("elastic")
+    fed_factory = _build(dataset, C, rounds)
+    accuracy_vs_dropout(rep, fed_factory, C, rounds)
+    round_time_vs_stragglers(rep, fed_factory, C, rounds)
+    rep.finish(baseline=not args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -139,6 +139,90 @@ def update_weights(
 
 
 # ---------------------------------------------------------------------------
+# Masked (partial-participation) reductions — the elastic round's step 3/4
+# ---------------------------------------------------------------------------
+#
+# An elastic round (fl/elastic.py) closes over a SUBSET of collaborators:
+# ``part [C]`` is 1.0 for responders, 0.0 for absentees.  The helpers
+# below are the masked twins of the reductions above, with one contract
+# the equivalence tests pin down: with an all-ones ``part`` every helper
+# is BIT-FOR-BIT the unmasked reduction.  A ``where``-then-reduce is NOT
+# enough for that — XLA may fuse the select into the reduction and
+# reassociate it, shifting results by an ulp even under an all-true
+# predicate — so each helper computes the literal unmasked reduction too
+# and selects it on ``jnp.all(part > 0)``: the full-participation branch
+# runs the exact lockstep ops.
+
+
+def masked_error_sum(errs: jax.Array, part: jax.Array) -> jax.Array:
+    """Global weighted error restricted to responding shards.
+
+    errs [C, H], part [C] -> eps [H].  Absent collaborators' error rows
+    are zeroed before the shard-axis sum: their samples simply are not
+    in this round's federation."""
+    masked = jnp.sum(jnp.where(part[:, None] > 0, errs, 0.0), axis=0)
+    return jnp.where(jnp.all(part > 0), jnp.sum(errs, axis=0), masked)
+
+
+def masked_argmin(eps: jax.Array, hyp_part: jax.Array) -> jax.Array:
+    """argmin over the hypotheses of RESPONDING collaborators only
+    (absent collaborators never uploaded theirs).  eps/hyp_part [H]."""
+    masked = jnp.argmin(jnp.where(hyp_part > 0, eps, jnp.inf))
+    return jnp.where(jnp.all(hyp_part > 0), jnp.argmin(eps), masked)
+
+
+def participation_denom(weights: jax.Array, part: jax.Array) -> jax.Array:
+    """Normaliser for a partial-participation weighted error.
+
+    The sample weights are globally normalised over ALL shards, so an
+    eps summed over responders only underestimates the error; dividing
+    by the responders' weight mass renormalises it to a probability.
+    Returns the literal 1.0 under full participation so the division is
+    an IEEE-exact identity and the lockstep bits are preserved."""
+    mass = jnp.sum(jnp.where(part[:, None] > 0, weights, 0.0))
+    return jnp.where(jnp.all(part > 0), 1.0, jnp.maximum(mass, 1e-30))
+
+
+def masked_update_weights(
+    w: jax.Array,  # [C, n] f32
+    mis: jax.Array,  # [C, n] f32
+    mask: jax.Array,  # [C, n] f32
+    part: jax.Array,  # [C] f32 — responders
+    alpha: jax.Array,
+    *,
+    use_pallas: bool = False,
+    **kw: Any,
+) -> jax.Array:
+    """Paper step 4 over responders only: absent collaborators' rows are
+    FROZEN (they never saw the chosen hypothesis), but the global
+    renormalisation still runs over every row — the weights stay one
+    distribution over the whole federation, so a returning collaborator
+    resumes with correctly-scaled weights."""
+    upd = update_weights(
+        w, mis, mask, alpha, use_pallas=use_pallas, renormalize=False, **kw
+    )
+    sel = jnp.where(part[:, None] > 0, upd, w)
+    masked = sel / jnp.maximum(jnp.sum(sel), 1e-30)
+    flat = upd.reshape(-1)
+    lockstep = (flat / jnp.maximum(jnp.sum(flat), 1e-30)).reshape(w.shape)
+    return jnp.where(jnp.all(part > 0), lockstep, masked)
+
+
+def masked_member_prediction(
+    learner: WeakLearner, spec: LearnerSpec, params_t: Any,
+    cmask: jax.Array,  # [C] f32 — committee members present when appended
+    X: jax.Array,
+) -> jax.Array:
+    """DistBoost.F committee vote with absent members' votes masked out
+    (the committee slot always holds C member buffers; ``cmask`` records
+    which of them actually participated in that round)."""
+    preds = jax.vmap(lambda p: learner.predict(spec, p, X))(params_t)  # [C, n]
+    oh = jax.nn.one_hot(preds, spec.n_classes)
+    sub = jnp.sum(jnp.where(cmask[:, None, None] > 0, oh, 0.0), axis=0)
+    return jnp.argmax(sub, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
 # Incremental ensemble evaluation
 # ---------------------------------------------------------------------------
 
@@ -191,6 +275,28 @@ def tally_new_votes(
     def add(t, votes):
         pred = member_prediction(
             learner, spec, _take_slot(ensemble.params, t), X, committee=committee
+        )
+        return votes + ensemble.alpha[t] * jax.nn.one_hot(pred, spec.n_classes)
+
+    votes = jax.lax.fori_loop(tally.counted, ensemble.count, add, tally.votes)
+    return VoteTally(votes=votes, counted=ensemble.count)
+
+
+def tally_new_votes_masked(
+    learner: WeakLearner,
+    spec: LearnerSpec,
+    ensemble,  # boosting.Ensemble of committee slots
+    cmasks: jax.Array,  # [T, C] f32 — per-slot committee member masks
+    tally: VoteTally,
+    X: jax.Array,
+) -> VoteTally:
+    """:func:`tally_new_votes` for elastic DistBoost.F ensembles: each
+    committee slot votes through its own membership mask.  With all-ones
+    masks this is bit-for-bit ``tally_new_votes(committee=True)``."""
+
+    def add(t, votes):
+        pred = masked_member_prediction(
+            learner, spec, _take_slot(ensemble.params, t), cmasks[t], X
         )
         return votes + ensemble.alpha[t] * jax.nn.one_hot(pred, spec.n_classes)
 

@@ -161,8 +161,18 @@ class Federation:
         publish_every: Optional[int] = None,
         publish_dir: Optional[str] = None,
         on_checkpoint: Optional[Callable[[Path, int], None]] = None,
+        policy=None,
+        faults=None,
     ) -> List[Dict[str, float]]:
         """Run the federation; optionally publish serving checkpoints.
+
+        ``policy`` (an ``fl/elastic.ParticipationPolicy``) switches the
+        round loop to the elastic runtime: straggler deadlines, partial
+        participation, staleness-discounted late merges, and membership
+        churn, optionally under a seeded ``faults``
+        (``fl/elastic.FaultPlan``) injection schedule.  With no faults
+        and ``deadline_s=None`` the elastic loop is bit-for-bit this
+        method's lockstep fused path.
 
         ``publish_every=k`` emits a versioned serving artifact
         (``serve/artifact.publish_artifact``) into ``publish_dir`` every
@@ -176,6 +186,35 @@ class Federation:
         their list-of-pairs ensemble and do not publish.
         """
         rounds = rounds or self.plan.aggregator.rounds
+        if policy is not None or faults is not None:
+            from repro.fl.elastic import ElasticFederation, ParticipationPolicy
+
+            if self.hetero:
+                raise NotImplementedError(
+                    "elastic rounds support homogeneous federations only; "
+                    "heterogeneous groups keep the lockstep loop"
+                )
+            elastic = ElasticFederation(
+                self.plan,
+                jnp.stack([c.X for c in self.collaborators]),
+                jnp.stack([c.y for c in self.collaborators]),
+                jnp.stack([c.mask for c in self.collaborators]),
+                self.X_test, self.y_test, self.spec, self.key,
+                policy=policy or ParticipationPolicy(),
+                faults=faults,
+            )
+            self.elastic = elastic
+            history = elastic.run(
+                rounds, eval_every,
+                publish_every=publish_every, publish_dir=publish_dir,
+                on_checkpoint=on_checkpoint,
+            )
+            # mirror the fused path's externally visible state
+            self.history = elastic.history
+            self._fused_state = elastic.state
+            self.comm_bytes += elastic.comm_bytes
+            self.published.extend(elastic.published)
+            return history
         if self.hetero and not (
             self.plan.optimizations.fused_round and self.plan.algorithm != "fedavg"
         ):

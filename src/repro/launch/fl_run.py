@@ -95,6 +95,44 @@ def main(argv=None):
     ap.add_argument("--history-out", default=None, metavar="PATH",
                     help="write the run history + comm accounting as JSON "
                          "(process 0 in distributed mode)")
+    # -- elastic runtime (fl/elastic.py): participation policy ------------
+    ap.add_argument("--elastic", action="store_true",
+                    help="event-driven elastic rounds: straggler deadlines, "
+                         "partial participation, staleness-discounted late "
+                         "merges (with --distributed: the fault-tolerant "
+                         "TCP-star runtime with dead-process eviction)")
+    ap.add_argument("--deadline-ms", type=float, default=None, metavar="MS",
+                    help="straggler deadline per round; omit to wait for "
+                         "every active collaborator (lockstep semantics)")
+    ap.add_argument("--min-responders", type=int, default=1,
+                    help="a round never closes over fewer responders — the "
+                         "deadline stretches to the fastest arrivals")
+    ap.add_argument("--staleness-gamma", type=float, default=0.5,
+                    help="late-merge alpha discount per round of lateness")
+    ap.add_argument("--max-staleness", type=int, default=2,
+                    help="rounds after which a late hypothesis is discarded")
+    ap.add_argument("--no-late-merge", action="store_true",
+                    help="drop stragglers' uploads instead of merging them")
+    ap.add_argument("--elastic-realtime", action="store_true",
+                    help="wall-clock arrival board (timers) instead of the "
+                         "deterministic virtual clock (in-process runs only)")
+    # -- fault injection (fl/elastic.py::FaultPlan) -----------------------
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the deterministic fault schedule")
+    ap.add_argument("--fault-drop-p", type=float, default=0.0,
+                    help="per-(round, collaborator) upload-loss probability")
+    ap.add_argument("--fault-delay-p", type=float, default=0.0,
+                    help="per-(round, collaborator) straggler probability")
+    ap.add_argument("--fault-delay-ms", default="0:0", metavar="LO:HI",
+                    help="straggler delay range in milliseconds")
+    ap.add_argument("--fault-kill", action="append", default=[],
+                    metavar="PID:ROUND",
+                    help="kill collaborator PID at ROUND (repeatable); in "
+                         "distributed mode the process really exits mid-round")
+    ap.add_argument("--fault-flaky", action="append", default=[],
+                    metavar="PID:OFF:REJOIN",
+                    help="collaborator PID offline for rounds [OFF, REJOIN) "
+                         "then rejoins (repeatable)")
     args = ap.parse_args(argv)
     if args.distributed:
         # must precede every other JAX call in the process: picks the gloo
@@ -108,9 +146,10 @@ def main(argv=None):
             ap.error(f"--distributed is process-per-collaborator: "
                      f"--collaborators {args.collaborators} != "
                      f"--num-processes {args.num_processes}")
-        from repro.fl import distributed as _dist
+        if not args.elastic:
+            from repro.fl import distributed as _dist
 
-        _dist.initialize(args.coordinator, args.num_processes, args.process_id)
+            _dist.initialize(args.coordinator, args.num_processes, args.process_id)
     if args.trace:
         trace.enable()
 
@@ -172,20 +211,55 @@ def main(argv=None):
             optimizations=dataclasses.replace(plan.optimizations, use_pallas=True),
         )
     fed = Federation(plan, Xs, ys, masks, Xte, yte, lspec, k3)
+    policy, faults = _build_policy_faults(args) if args.elastic else (None, None)
     t0 = time.time()
     history = fed.run(eval_every=args.eval_every,
                       publish_every=args.publish_every,
-                      publish_dir=args.publish_dir)
+                      publish_dir=args.publish_dir,
+                      policy=policy, faults=faults)
     dt = time.time() - t0
     _print_history(history)
     print(f"total {dt:.1f}s  comm {fed.comm_bytes/1e6:.2f} MB  final F1 {history[-1]['f1']:.4f}")
     if args.history_out:
         import json
 
+        summary = {"history": history, "comm_bytes": fed.comm_bytes}
+        if args.elastic:
+            summary = fed.elastic.summary()
         with open(args.history_out, "w") as f:
-            json.dump({"history": history, "comm_bytes": fed.comm_bytes}, f, indent=2)
+            json.dump(summary, f, indent=2)
     _finish_obs(args)
     return history
+
+
+def _build_policy_faults(args):
+    """--elastic / --fault-* flags -> (ParticipationPolicy, FaultPlan)."""
+    from repro.fl.elastic import FaultPlan, ParticipationPolicy
+
+    lo, hi = (float(x) for x in args.fault_delay_ms.split(":"))
+    kills = tuple(
+        tuple(int(x) for x in spec.split(":")) for spec in args.fault_kill
+    )
+    flaky = tuple(
+        tuple(int(x) for x in spec.split(":")) for spec in args.fault_flaky
+    )
+    policy = ParticipationPolicy(
+        deadline_s=None if args.deadline_ms is None else args.deadline_ms / 1e3,
+        min_responders=args.min_responders,
+        staleness_gamma=args.staleness_gamma,
+        max_staleness=args.max_staleness,
+        late_merge=not args.no_late_merge,
+        realtime=args.elastic_realtime,
+    )
+    faults = FaultPlan(
+        seed=args.fault_seed,
+        delay_p=args.fault_delay_p,
+        delay_range_s=(lo / 1e3, hi / 1e3),
+        drop_p=args.fault_drop_p,
+        kills=kills,
+        flaky=flaky,
+    )
+    return policy, faults
 
 
 def _print_history(history):
@@ -203,6 +277,27 @@ def _run_distributed(args, lspec, Xs, ys, masks, Xte, yte, key):
     N-process launch lives in ``launch/fl_spawn.py``)."""
     import dataclasses
     import json
+
+    if args.elastic:
+        from repro.fl.elastic_dist import run_elastic_distributed
+
+        policy, faults = _build_policy_faults(args)
+        t0 = time.time()
+        coord, history = run_elastic_distributed(
+            args, policy, faults, lspec, Xs, ys, masks, Xte, yte, key,
+        )
+        if coord is not None:  # process 0
+            dt = time.time() - t0
+            _print_history(history)
+            print(f"elastic distributed ({args.num_processes} processes, "
+                  f"evicted {len(coord.evicted)}): total {dt:.1f}s  "
+                  f"comm {coord.comm_bytes/1e6:.2f} MB  "
+                  f"final F1 {history[-1]['f1']:.4f}")
+            if args.history_out:
+                with open(args.history_out, "w") as f:
+                    json.dump(coord.summary(), f, indent=2)
+            _finish_obs(args)
+        return history
 
     from repro.fl.distributed import DistributedFederation, is_main
 

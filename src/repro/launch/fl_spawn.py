@@ -25,6 +25,8 @@ import socket
 import subprocess
 import sys
 import tempfile
+import threading
+import time
 from typing import List, Optional
 
 
@@ -32,6 +34,85 @@ def free_port() -> int:
     with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as s:
         s.bind(("127.0.0.1", 0))
         return s.getsockname()[1]
+
+
+def _tail(path: Optional[str], n: int = 2000) -> str:
+    if path is None:
+        return ""
+    try:
+        with open(path) as f:
+            return f.read()[-n:]
+    except OSError:
+        return "<log unreadable>"
+
+
+def _join_all(
+    procs: List[subprocess.Popen],
+    log_paths: List[Optional[str]],
+    *,
+    timeout: float,
+    grace: float = 60.0,
+    out_lines: Optional[List[str]] = None,
+    stream=None,
+) -> List[int]:
+    """Join the process group with a hard deadline.
+
+    Process 0's stdout (a pipe) is drained on a thread so a wedged
+    process can never block the launcher on a ``readline`` — the old
+    launcher hung forever on exactly that.  After process 0 exits, the
+    orphans get ``grace`` seconds to finish; on ANY deadline the
+    stragglers' log tails are printed FIRST (the evidence), then the
+    whole group is killed and every timed-out slot reports exit code
+    124."""
+    stream = stream if stream is not None else sys.stdout
+
+    def _drain():
+        for line in procs[0].stdout:  # type: ignore[union-attr]
+            stream.write(line)
+            stream.flush()
+            if out_lines is not None:
+                out_lines.append(line)
+
+    drainer = None
+    if procs[0].stdout is not None:
+        drainer = threading.Thread(target=_drain, daemon=True)
+        drainer.start()
+
+    deadline = time.monotonic() + timeout
+    rcs: List[Optional[int]] = [None] * len(procs)
+
+    def _await(i: int, until: float) -> None:
+        if rcs[i] is None:
+            try:
+                rcs[i] = procs[i].wait(timeout=max(until - time.monotonic(), 0.0))
+            except subprocess.TimeoutExpired:
+                pass
+
+    _await(0, deadline)
+    # once the coordinator is done (or timed out), orphans get a short
+    # grace window, never the full budget again
+    until = min(deadline, time.monotonic() + grace) if rcs[0] is not None else \
+        time.monotonic()
+    for i in range(1, len(procs)):
+        _await(i, until)
+
+    hung = [i for i, rc in enumerate(rcs) if rc is None]
+    if hung:
+        for i in hung:  # tails first, then kill: keep the evidence
+            print(f"--- process {i} hung past the deadline; log tail ---\n"
+                  f"{_tail(log_paths[i]) or '<streamed to stdout>'}",
+                  file=sys.stderr)
+        for i in hung:
+            procs[i].kill()
+        for i in hung:
+            try:
+                procs[i].wait(timeout=10.0)
+            except subprocess.TimeoutExpired:
+                pass
+            rcs[i] = 124
+    if drainer is not None:
+        drainer.join(timeout=10.0)
+    return [rc if rc is not None else 124 for rc in rcs]
 
 
 def spawn(
@@ -73,19 +154,17 @@ def spawn(
             ))
             logs.append(logf)
 
-    # stream the coordinator's output live while collecting it
+    # stream the coordinator's output live while joining with a deadline
     out_lines: List[str] = []
     try:
-        for line in procs[0].stdout:  # type: ignore[union-attr]
-            sys.stdout.write(line)
-            sys.stdout.flush()
-            out_lines.append(line)
-        rcs = [p.wait(timeout=timeout) for p in procs]
-    except (subprocess.TimeoutExpired, KeyboardInterrupt):
+        rcs = _join_all(
+            procs, [f.name if f is not None else None for f in logs],
+            timeout=timeout, out_lines=out_lines,
+        )
+    except KeyboardInterrupt:
         for p in procs:
             p.kill()
-        print("fl_spawn: timed out / interrupted; killed the process group",
-              file=sys.stderr)
+        print("fl_spawn: interrupted; killed the process group", file=sys.stderr)
         return 124
     finally:
         for f in logs:

@@ -19,6 +19,7 @@ CLI_SOURCES = [
     REPO / "benchmarks" / "bench_heterogeneous.py",
     REPO / "benchmarks" / "bench_optimizations.py",
     REPO / "benchmarks" / "bench_serve.py",
+    REPO / "benchmarks" / "bench_elastic.py",
     REPO / "scripts" / "lint.py",
 ]
 

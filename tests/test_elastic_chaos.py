@@ -1,0 +1,96 @@
+"""Chaos harness for the elastic multi-process runtime: real fl_spawn
+process groups with seeded fault injection.
+
+Two scenarios, both deterministic (the FaultPlan schedule is a pure
+function of ``--fault-seed``):
+
+  * kill a collaborator mid-round — the round closes over the
+    responders within the deadline, the dead process is evicted (no
+    hung collective), the federation finishes every round, and the
+    final F1 clears the ``--min-f1`` floor;
+  * delay-only stragglers — their uploads land as LATE merges with the
+    staleness discount applied (``alpha < base_alpha``), never lost.
+
+Subprocess layout mirrors tests/test_distributed.py: children pop
+XLA_FLAGS and run from src/ on the path.
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+N = 4
+
+
+def _child_env():
+    env = dict(
+        os.environ,
+        PYTHONPATH=os.pathsep.join(
+            p for p in [str(SRC), os.environ.get("PYTHONPATH", "")] if p
+        ),
+        JAX_PLATFORMS="cpu",
+    )
+    env.pop("XLA_FLAGS", None)  # one real device per process
+    return env
+
+
+def _spawn_elastic(extra_args, *, min_f1=None, timeout=600):
+    hist_path = tempfile.mktemp(suffix=".json", prefix="elastic_chaos_")
+    cmd = [
+        sys.executable, "-m", "repro.launch.fl_spawn",
+        "-n", str(N), "--timeout", str(timeout - 60),
+        *(["--min-f1", str(min_f1)] if min_f1 is not None else []),
+        "--",
+        "--elastic", "--dataset", "vehicle", "--rounds", "5",
+        "--eval-every", "1", "--history-out", hist_path,
+        *extra_args,
+    ]
+    proc = subprocess.run(
+        cmd, env=_child_env(), capture_output=True, text=True, timeout=timeout,
+    )
+    summary = None
+    if os.path.exists(hist_path):
+        with open(hist_path) as f:
+            summary = json.load(f)
+        os.unlink(hist_path)
+    return proc, summary
+
+
+def test_kill_mid_round_closes_over_responders():
+    """``--fault-kill 2:2``: collaborator 2 dies at round 2.  The
+    coordinator must evict it instead of hanging, keep federating over
+    the survivors, finish all 5 rounds, and clear the accuracy floor."""
+    proc, summary = _spawn_elastic(
+        ["--deadline-ms", "3000", "--fault-kill", "2:2"],
+        min_f1=0.5,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert summary is not None, "coordinator wrote no history"
+    assert summary["evicted"] == [2]
+    assert summary["dropouts"].get("dead") == 1
+    assert len(summary["history"]) == 5  # every round completed
+    # once dead, 2 never responds again: rounds >= 2 close over <= 3
+    assert all(r <= N - 1 for r in summary["responders"][2:])
+    assert all(r >= 1 for r in summary["responders"])
+    assert summary["final_f1"] >= 0.5
+
+
+def test_delay_only_stragglers_merge_late_and_discounted():
+    """Stragglers past an 800 ms deadline are deadline-dropped from
+    their round but their uploads surface as late merges with the
+    staleness discount applied — never silently lost."""
+    proc, summary = _spawn_elastic(
+        ["--deadline-ms", "800", "--fault-delay-p", "0.4",
+         "--fault-delay-ms", "1500:2000", "--fault-seed", "3"],
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert summary is not None, "coordinator wrote no history"
+    assert summary["dropouts"].get("deadline", 0) > 0
+    assert summary["late"], "expected late merges, got none"
+    for row in summary["late"]:
+        assert row["alpha"] < row["base_alpha"]
+        assert row["lateness"] >= 1
+    assert len(summary["history"]) == 5
